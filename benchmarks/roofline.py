@@ -1,0 +1,76 @@
+"""Roofline report: aggregate dry-run artifacts into the §Roofline table.
+
+Reads benchmarks/artifacts/dryrun_*.json (produced by repro.launch.dryrun)
+and prints, per (arch × shape × mesh): the three roofline terms, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and a one-line suggestion on
+what would move the dominant term.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Dict, List
+
+ART_DIR = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+
+def _suggest(dom: str, rec: Dict) -> str:
+    arch = rec["arch"]
+    kind = rec["kind"]
+    if dom == "collective":
+        if kind == "train":
+            return ("sequence-shard activations between blocks (all-reduce -> "
+                    "reduce-scatter+all-gather) and keep collectives bf16")
+        return "shard KV over heads where divisible; overlap a2a with compute"
+    if dom == "memory":
+        if kind == "decode":
+            return "int8 KV cache / MLA-style compressed cache; fuse dequant into decode kernel"
+        return "remat policy 'minimal'; fuse attention (flash) to skip score materialization"
+    return "increase per-chip batch or reduce mesh to lift MXU occupancy"
+
+
+def load_records(variant: str = "baseline") -> List[Dict]:
+    recs = []
+    for p in sorted(ART_DIR.glob("dryrun_*.json")):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("variant", "baseline") == variant:
+            recs.append(r)
+    return recs
+
+
+def main(variant: str = "baseline") -> List[Dict]:
+    recs = load_records(variant)
+    if not recs:
+        print("# roofline: no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all --both-meshes` first")
+        return []
+    print(f"# roofline ({variant}): {len(recs)} cells")
+    hdr = ["arch", "shape", "mesh", "compute_ms", "memory_ms", "collective_ms",
+           "bottleneck", "useful_flops_ratio", "args_GiB_per_dev", "suggestion"]
+    print(",".join(hdr))
+    for r in recs:
+        rt = r["roofline"]
+        terms = {
+            "compute": rt["compute_s"],
+            "memory": rt["memory_s"],
+            "collective": rt["collective_s"],
+        }
+        dom = max(terms, key=terms.get)
+        ufr = r.get("useful_flops_ratio")
+        row = [
+            r["arch"], r["shape"], r["mesh"],
+            f"{terms['compute']*1e3:.2f}", f"{terms['memory']*1e3:.2f}",
+            f"{terms['collective']*1e3:.2f}", dom,
+            f"{ufr:.2f}" if ufr else "-",
+            f"{r['memory']['analytic_arg_bytes_per_dev']/2**30:.2f}",
+            _suggest(dom, r),
+        ]
+        print(",".join(str(x) for x in row))
+    print()
+    return recs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one entry per paper table/figure + the roofline.
+
+``python -m benchmarks.run [--quick] [--only fig7,table1,...]``
+Emits CSV blocks (name, header, rows) to stdout.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller job counts (CI-sized)")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig1,fig7,fig8,fig9,fig10,table1,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name: str) -> bool:
+        return only is None or name in only
+
+    t0 = time.time()
+    if want("fig1"):
+        from . import fig1_characterization
+        fig1_characterization.main(n_jobs=200 if args.quick else 400)
+    if want("fig7"):
+        from . import fig7_simulation
+        fig7_simulation.main(job_counts=(40, 80) if args.quick else (50, 100, 200))
+    if want("table1"):
+        from . import table1_overhead
+        table1_overhead.main(n_jobs=30 if args.quick else 60)
+    if want("fig9"):
+        from . import fig9_sensitivity
+        fig9_sensitivity.main(n_jobs=40 if args.quick else 80)
+    if want("fig10"):
+        from . import fig10_ablation
+        fig10_ablation.main(n_jobs=50 if args.quick else 100)
+    if want("fig8"):
+        from . import fig8_testbed
+        fig8_testbed.main(jobs=8 if args.quick else 14)
+    if want("roofline"):
+        from . import roofline
+        roofline.main()
+    print(f"# total benchmark wall time: {time.time()-t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,25 @@
+"""Lower + compile one (architecture × shape × mesh) cell and print its
+roofline decomposition — the multi-pod dry-run in miniature.
+
+NOTE: must run as a fresh process (512 host devices are locked in at jax
+init), which is why this example shells out to the dryrun module.
+
+Run:  PYTHONPATH=src python examples/dryrun_cell.py [arch] [shape]
+"""
+
+import subprocess
+import sys
+
+
+def main() -> None:
+    arch = sys.argv[1] if len(sys.argv) > 1 else "internlm2-20b"
+    shape = sys.argv[2] if len(sys.argv) > 2 else "decode_32k"
+    for extra in ([], ["--multi-pod"]):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape] + extra
+        print("$", " ".join(cmd))
+        subprocess.run(cmd, check=False)
+
+
+if __name__ == "__main__":
+    main()

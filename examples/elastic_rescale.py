@@ -1,0 +1,76 @@
+"""Elastic scaling demo: checkpoint on one mesh, restore on another.
+
+Simulates losing half the data-parallel slice mid-training: train on a
+(4, 2) mesh, checkpoint, rebuild a (2, 2) mesh (half the "cluster"), and
+resume — `restore_checkpoint` repartitions every host array onto the new
+mesh's NamedShardings.
+
+Must run as its own process (device count locks at jax init):
+  PYTHONPATH=src python examples/elastic_rescale.py
+"""
+
+import os
+
+if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.distributed import sharding as shd
+from repro.distributed.checkpoint import restore_checkpoint, save_checkpoint
+from repro.distributed.optimizer import OptConfig, init_opt_state
+from repro.launch.train import synthetic_batch
+from repro.models import init_params
+from repro.models.zoo import build_train_step
+
+
+def main() -> None:
+    cfg = get_smoke_config("internlm2_20b")
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2)
+    step_fn = jax.jit(build_train_step(cfg, opt_cfg))
+    rng = np.random.default_rng(0)
+
+    params, specs = init_params(cfg, jax.random.key(0))
+    opt_state = init_opt_state(params, opt_cfg)
+
+    with tempfile.TemporaryDirectory() as ckpt:
+        # phase 1: train on the "full cluster" (data=4, model=2)
+        mesh1 = jax.make_mesh((4, 2), ("data", "model"))
+        with shd.use_mesh(mesh1):
+            sh1 = shd.tree_shardings(specs, params, mesh1)
+            params = jax.device_put(params, sh1)
+            for s in range(3):
+                batch = synthetic_batch(rng, cfg, 8, 32)
+                params, opt_state, m = step_fn(params, opt_state, batch)
+                print(f"[mesh 4x2] step={s+1} loss={float(m['loss']):.3f}")
+        save_checkpoint(ckpt, 3, (params, opt_state), mesh_desc="4x2")
+        print("checkpointed on 4x2")
+
+        # phase 2: "lose" half the data slice -> restore on (2, 2)
+        mesh2 = jax.make_mesh((2, 2), ("data", "model"))
+        with shd.use_mesh(mesh2):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+
+            sh2 = shd.tree_shardings(specs, params, mesh2)
+            opt_sh = jax.tree.map(
+                lambda _: NamedSharding(mesh2, P()), opt_state
+            )
+            (params2, opt2), step = restore_checkpoint(
+                ckpt, like=(params, opt_state), shardings=(sh2, opt_sh)
+            )
+            print(f"restored step {step} onto 2x2 "
+                  f"(devices/leaf: {len(jax.tree.leaves(params2)[0].devices())})")
+            for s in range(step, step + 3):
+                batch = synthetic_batch(rng, cfg, 8, 32)
+                params2, opt2, m = step_fn(params2, opt2, batch)
+                print(f"[mesh 2x2] step={s+1} loss={float(m['loss']):.3f}")
+    print("elastic rescale OK")
+
+
+if __name__ == "__main__":
+    main()

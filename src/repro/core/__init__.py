@@ -1,0 +1,46 @@
+"""LLMSched core: the paper's primary contribution.
+
+- :mod:`repro.core.dag`         -- DAG model (regular/LLM/dynamic stages, SIV-A)
+- :mod:`repro.core.bayesnet`    -- discrete Bayesian network profiler (SIV-B)
+- :mod:`repro.core.calibration` -- batching-aware duration calibration (Eq. 2)
+- :mod:`repro.core.entropy`     -- entropy/MI uncertainty quantification (SIV-C)
+- :mod:`repro.core.profiler`    -- per-application profiles (BN + discretizers)
+- :mod:`repro.core.scheduler`   -- Algorithm 1 (uncertainty-aware eps-greedy)
+- :mod:`repro.core.baselines`   -- FCFS / Fair / SJF / SRTF / Argus / Carbyne / Decima
+"""
+
+from .dag import (
+    ApplicationTemplate,
+    Job,
+    Stage,
+    StageTemplate,
+    StageType,
+    Task,
+    TaskState,
+    make_job,
+)
+from .bayesnet import BayesNet, Discretizer, Factor, fit_discretizer
+from .calibration import LatencyProfile, measured_profile, roofline_profile
+from .entropy import (
+    binary_entropy,
+    conditional_mutual_information,
+    dynamic_stage_entropy,
+    entropy,
+    uncertainty_reduction,
+)
+from .profiler import AppProfile, JobTrace, ProfileStore
+from .scheduler import ClusterView, Decision, LLMSched, Scheduler
+from .baselines import FCFS, SJF, SRTF, Argus, Carbyne, Decima, Fair, make_baselines
+
+__all__ = [
+    "ApplicationTemplate", "Job", "Stage", "StageTemplate", "StageType",
+    "Task", "TaskState", "make_job",
+    "BayesNet", "Discretizer", "Factor", "fit_discretizer",
+    "LatencyProfile", "measured_profile", "roofline_profile",
+    "binary_entropy", "conditional_mutual_information",
+    "dynamic_stage_entropy", "entropy", "uncertainty_reduction",
+    "AppProfile", "JobTrace", "ProfileStore",
+    "ClusterView", "Decision", "LLMSched", "Scheduler",
+    "FCFS", "SJF", "SRTF", "Argus", "Carbyne", "Decima", "Fair",
+    "make_baselines",
+]

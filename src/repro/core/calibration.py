@@ -1,0 +1,78 @@
+"""Batching-aware duration calibration (paper §IV-B, Eq. 2).
+
+The duration of an LLM task depends on the number of concurrently batched
+requests on its executor.  The paper profiles the average per-token decode
+latency ``l(b)`` at each batch size b and rescales a duration estimate
+``d_r`` recorded at batch size ``b_r`` to a target batch size ``b_t``:
+
+    d_t = d_r * l(b_t) / l(b_r)                                  (Eq. 2)
+
+On TPU the profile is a roofline effect: decode is memory-bound, so a step
+reads the full weight set + the batch's KV cache once per token.  Batching
+amortizes the weight reads across requests:
+
+    l(b) ≈ (W_bytes + b * KV_bytes) / (b * HBM_bw)   (per-request·token)
+
+We support both a measured profile (from the serving engine / testbed) and
+this analytic roofline profile (used by the simulator and for archs we
+cannot run at full size).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Mapping, Optional, Sequence
+
+import numpy as np
+
+
+@dataclass
+class LatencyProfile:
+    """Per-token decode latency l(b) for batch sizes 1..max_batch."""
+
+    batch_sizes: np.ndarray
+    latency: np.ndarray  # seconds per generated token, per request
+
+    def __post_init__(self) -> None:
+        self.batch_sizes = np.asarray(self.batch_sizes, dtype=np.int64)
+        self.latency = np.asarray(self.latency, dtype=np.float64)
+        order = np.argsort(self.batch_sizes)
+        self.batch_sizes = self.batch_sizes[order]
+        self.latency = self.latency[order]
+
+    def l(self, b: int) -> float:
+        """l(b) with linear interpolation / edge clamping."""
+        b = max(1, int(b))
+        return float(np.interp(b, self.batch_sizes, self.latency))
+
+    def calibrate(self, d_r: float, b_r: int, b_t: int) -> float:
+        """Eq. (2): rescale duration d_r observed at batch b_r to batch b_t."""
+        lr = self.l(b_r)
+        if lr <= 0:
+            return d_r
+        return d_r * self.l(b_t) / lr
+
+
+def roofline_profile(
+    weight_bytes: float,
+    kv_bytes_per_request: float,
+    hbm_bw: float = 819e9,
+    max_batch: int = 256,
+    step_overhead_s: float = 2e-5,
+) -> LatencyProfile:
+    """Analytic l(b) for a memory-bound decode step on one TPU v5e chip.
+
+    One decode step streams all weights once plus each request's KV cache;
+    per-token latency for a single request in a batch of b is the step time
+    (weights amortized over the batch, KV not amortized).
+    """
+    bs = np.arange(1, max_batch + 1)
+    step_time = (weight_bytes + bs * kv_bytes_per_request) / hbm_bw + step_overhead_s
+    return LatencyProfile(batch_sizes=bs, latency=step_time)
+
+
+def measured_profile(samples: Mapping[int, Sequence[float]]) -> LatencyProfile:
+    """Build a profile from measured {batch_size: [per-token latencies]}."""
+    bs = sorted(samples)
+    lat = [float(np.mean(samples[b])) for b in bs]
+    return LatencyProfile(batch_sizes=np.array(bs), latency=np.array(lat))

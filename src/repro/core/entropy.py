@@ -1,0 +1,108 @@
+"""Entropy-based uncertainty quantification (paper §IV-C, Eqs. 3–6)."""
+
+from __future__ import annotations
+
+from typing import Dict, Iterable, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bayesnet import BayesNet, Discretizer, Evidence, Factor
+
+
+def entropy(probs: np.ndarray) -> float:
+    """Shannon entropy (Eq. 3), base 2; 0·log0 := 0."""
+    p = np.asarray(probs, dtype=np.float64).ravel()
+    p = p[p > 0]
+    return float(-(p * np.log2(p)).sum())
+
+
+def binary_entropy(p: float) -> float:
+    p = float(np.clip(p, 0.0, 1.0))
+    return entropy(np.array([p, 1.0 - p]))
+
+
+def dynamic_stage_entropy(
+    candidate_probs: Mapping[str, float],
+    edge_probs: Mapping[Tuple[str, str], float],
+) -> float:
+    """Eq. (4): node entropy + edge entropy of the candidate graph.
+
+    ``candidate_probs[c]``  = P(stage c is selected by the planner LLM)
+    ``edge_probs[(u, v)]``  = P(edge u→v exists in the generated plan)
+    Both are learned from the history of realized plans.
+    """
+    h = 0.0
+    for p in candidate_probs.values():
+        h += binary_entropy(p)
+    for p in edge_probs.values():
+        h += binary_entropy(p)
+    return h
+
+
+def conditional_mutual_information(
+    bn: BayesNet,
+    targets: Sequence[str],
+    x: str,
+    evidence: Optional[Evidence] = None,
+    max_joint: int = 4,
+) -> float:
+    """I(Y_1..Y_M ; X | E)  (Eq. 5 with conditioning set E).
+
+    Exact when M ≤ ``max_joint`` (joint table ≤ 7^(max_joint+1) entries);
+    for larger M we keep the ``max_joint`` targets whose marginal posterior
+    entropy is largest and compute the exact joint MI over those — a lower
+    bound that preserves the ranking the scheduler needs.
+    """
+    evidence = dict(evidence or {})
+    targets = [t for t in targets if t != x and t not in evidence]
+    if not targets:
+        return 0.0
+    if len(targets) > max_joint:
+        ents = {t: entropy(bn.marginal(t, evidence)) for t in targets}
+        targets = sorted(targets, key=lambda t: -ents[t])[:max_joint]
+
+    # joint over (targets, x) given evidence
+    jf = bn.joint(list(targets) + [x], evidence)
+    if x not in jf.vars:  # x fixed by evidence — no information to gain
+        return 0.0
+    p_joint = jf.reorder(list(targets) + [x]).values
+    p_y = p_joint.sum(axis=-1)             # P(Y|E)
+    p_x = p_joint.reshape(-1, p_joint.shape[-1]).sum(axis=0)  # P(X|E)
+
+    h_y = entropy(p_y)
+    # H(Y | X, E) = sum_x P(x|E) H(Y | X=x, E)
+    h_y_given_x = 0.0
+    flat = p_joint.reshape(-1, p_joint.shape[-1])
+    for xi in range(flat.shape[1]):
+        px = p_x[xi]
+        if px <= 0:
+            continue
+        h_y_given_x += px * entropy(flat[:, xi] / px)
+    return max(0.0, h_y - h_y_given_x)
+
+
+def uncertainty_reduction(
+    bn: BayesNet,
+    discretizers: Mapping[str, Discretizer],
+    x: str,
+    unscheduled: Iterable[str],
+    evidence: Optional[Evidence] = None,
+    dynamic_bonus: float = 0.0,
+) -> float:
+    """R(X)  (Eq. 6): I(Y_1..Y_M; X | E) × Σ_m Range(Y_m)  [+ dynamic bonus].
+
+    ``dynamic_bonus`` carries the Eq. (4) entropy of a dynamic stage whose
+    structure is resolved by finishing X (its preceding LLM stage), already
+    multiplied by that stage's duration range (paper §IV-C last ¶).
+    """
+    evidence = dict(evidence or {})
+    unsched = [u for u in unscheduled if u != x and u not in evidence]
+    correlated = [y for y in unsched if bn.correlated(x, y)]
+    if not correlated:
+        return float(dynamic_bonus)
+    mi = conditional_mutual_information(bn, correlated, x, evidence)
+    range_sum = 0.0
+    for y in correlated:
+        post = bn.marginal(y, evidence)
+        range_sum += discretizers[y].range_span(post)
+    return float(mi * range_sum + dynamic_bonus)

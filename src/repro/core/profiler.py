@@ -1,0 +1,307 @@
+"""Application profiler: BN + discretizers + dynamic-stage statistics (§IV-B).
+
+One :class:`AppProfile` per application template.  It is trained on a
+history of job traces and provides everything the scheduler needs:
+
+- posterior duration estimates per stage / per job (BN inference on the
+  evidence of completed stages — including "revealed skipped" chain stages
+  observed as bin 0);
+- uncertainty-reduction scores R(X) (Eq. 6) incl. the dynamic-stage bonus;
+- job-duration distribution intervals for the non-overlapping grouping
+  (Algorithm 1 line 5);
+- per-candidate duration means for realized dynamic stages.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .bayesnet import BayesNet, Discretizer, fit_discretizer
+from .dag import ApplicationTemplate, Job, Stage, StageType
+from .entropy import dynamic_stage_entropy, uncertainty_reduction
+
+
+@dataclass
+class JobTrace:
+    """One historical execution of an application."""
+
+    app_name: str
+    durations: Dict[str, float]  # stage name -> duration (0.0 if skipped)
+    # dyn stage -> (chosen candidates, chosen edges)
+    dynamic: Dict[str, Tuple[Tuple[str, ...], Tuple[Tuple[str, str], ...]]] = field(
+        default_factory=dict
+    )
+    # dyn stage -> {candidate: duration}
+    dynamic_durations: Dict[str, Dict[str, float]] = field(default_factory=dict)
+
+
+class AppProfile:
+    def __init__(self, app: ApplicationTemplate) -> None:
+        self.app = app
+        self.bn = BayesNet()
+        self.discretizers: Dict[str, Discretizer] = {}
+        self.mean_duration: float = 0.0
+        # dynamic-stage statistics
+        self.candidate_probs: Dict[str, Dict[str, float]] = {}
+        self.edge_probs: Dict[str, Dict[Tuple[str, str], float]] = {}
+        self.candidate_mean_dur: Dict[str, Dict[str, float]] = {}
+        self._dyn_entropy: Dict[str, float] = {}
+        self._fitted = False
+        # posterior caches — the paper's "lookup table" argument (§IV-D):
+        # evidence sets recur across scheduling events, so memoised BN
+        # queries make scheduling effectively O(1) per stage.
+        self._marg_cache: Dict[Tuple, np.ndarray] = {}
+        self._ur_cache: Dict[Tuple, float] = {}
+
+    # ------------------------------------------------------------------ fit
+    def fit(self, traces: Sequence[JobTrace], max_bins: int = 6,
+            mi_threshold: float = 0.05, max_parents: int = 3) -> "AppProfile":
+        names = self.app.topo_order()
+        mat = np.zeros((len(traces), len(names)))
+        for i, tr in enumerate(traces):
+            for j, n in enumerate(names):
+                mat[i, j] = tr.durations.get(n, 0.0)
+
+        for j, n in enumerate(names):
+            self.discretizers[n] = fit_discretizer(mat[:, j], max_bins=max_bins)
+
+        binned = np.zeros_like(mat, dtype=np.int64)
+        for j, n in enumerate(names):
+            d = self.discretizers[n]
+            binned[:, j] = [d.transform(x) for x in mat[:, j]]
+
+        self.bn.fit(
+            binned,
+            names=names,
+            cards=[self.discretizers[n].cardinality for n in names],
+            template_edges=self.app.edges,
+            mi_threshold=mi_threshold,
+            max_parents=max_parents,
+        )
+        self.mean_duration = float(mat.sum(axis=1).mean())
+
+        # dynamic-stage statistics from realized plans
+        for st in self.app.stages:
+            if st.stype is not StageType.DYNAMIC:
+                continue
+            n_tr = max(1, len(traces))
+            cprob = {c: 0.0 for c in st.candidates}
+            eprob = {e: 0.0 for e in st.candidate_edges}
+            cdur: Dict[str, List[float]] = {c: [] for c in st.candidates}
+            for tr in traces:
+                chosen, edges = tr.dynamic.get(st.name, ((), ()))
+                for c in chosen:
+                    if c in cprob:
+                        cprob[c] += 1.0
+                for e in edges:
+                    if tuple(e) in eprob:
+                        eprob[tuple(e)] += 1.0
+                for c, d in tr.dynamic_durations.get(st.name, {}).items():
+                    if c in cdur:
+                        cdur[c].append(d)
+            self.candidate_probs[st.name] = {c: v / n_tr for c, v in cprob.items()}
+            self.edge_probs[st.name] = {e: v / n_tr for e, v in eprob.items()}
+            self.candidate_mean_dur[st.name] = {
+                c: (float(np.mean(v)) if v else 1.0) for c, v in cdur.items()
+            }
+            self._dyn_entropy[st.name] = dynamic_stage_entropy(
+                self.candidate_probs[st.name], self.edge_probs[st.name]
+            )
+        self._fitted = True
+        return self
+
+    # ------------------------------------------------------- evidence/query
+    def evidence_for(self, job: Job) -> Dict[str, int]:
+        """BN evidence from this job's observable state."""
+        ev: Dict[str, int] = {}
+        for name, dur in job.completed_durations().items():
+            if name in self.discretizers:
+                ev[name] = self.discretizers[name].transform(dur)
+        for name in job.observed_skips():
+            d = self.discretizers.get(name)
+            if d is not None and d.has_zero_bin and name not in ev:
+                ev[name] = 0
+        return ev
+
+    @staticmethod
+    def _ev_key(evidence: Mapping[str, int]) -> Tuple:
+        return tuple(sorted(evidence.items()))
+
+    def marginal(self, name: str, evidence: Mapping[str, int]) -> np.ndarray:
+        key = (name, self._ev_key(evidence))
+        out = self._marg_cache.get(key)
+        if out is None:
+            out = self.bn.marginal(name, evidence)
+            self._marg_cache[key] = out
+        return out
+
+    def stage_expectation(self, name: str, evidence: Mapping[str, int]) -> float:
+        """E[duration of stage | evidence] via BN posterior."""
+        if not self._fitted or name not in self.discretizers:
+            return 1.0
+        post = self.marginal(name, evidence)
+        return self.discretizers[name].expectation(post)
+
+    def stage_bounds(self, name: str, evidence: Mapping[str, int]) -> Tuple[float, float]:
+        d = self.discretizers.get(name)
+        if d is None:
+            return (0.0, 1.0)
+        post = self.marginal(name, evidence)
+        idx = np.where(post > 1e-9)[0]
+        if len(idx) == 0:
+            return (0.0, 0.0)
+        return (float(d.repr_value[idx].min()), float(d.repr_value[idx].max()))
+
+    # ------------------------------------------------- remaining-time query
+    def est_remaining(
+        self,
+        job: Job,
+        now: float,
+        calibrate: Optional[Callable[[Stage, float], float]] = None,
+        mode: str = "critical_path",
+        use_bn: bool = True,
+    ) -> float:
+        """Estimated remaining duration of ``job`` (line 1 of Algorithm 1).
+
+        ``calibrate`` maps (stage, base_estimate) -> batching-calibrated
+        estimate (Eq. 2); identity if None.  ``use_bn=False`` gives the
+        "LLMSched w/o BN" ablation (historical means, no posterior).
+        """
+        ev = self.evidence_for(job) if use_bn else {}
+        est: Dict[str, float] = {}
+        for name, stage in job.stages.items():
+            # NOTE: ``stage.will_execute`` is ground truth — only observable
+            # once the stage is *revealed* (no oracle leak).  Unrevealed
+            # stages keep their BN expectation, whose bin-0 mass already
+            # prices in the probability they never run.
+            if stage.obs_done():
+                est[name] = 0.0
+                continue
+            if name in self.discretizers and self._fitted:
+                if use_bn:
+                    e = self.stage_expectation(name, ev)
+                else:
+                    post = self.marginal(name, {}) if self.bn.nodes else None
+                    e = (
+                        self.discretizers[name].expectation(post)
+                        if post is not None
+                        else float(self.discretizers[name].repr_value.mean())
+                    )
+            elif "." in name:
+                # runtime-expanded dynamic inner stage "<dyn>.<candidate>"
+                dyn, cand = name.split(".", 1)
+                e = self.candidate_mean_dur.get(dyn, {}).get(cand, 1.0)
+            else:
+                e = 1.0
+            if calibrate is not None:
+                e = calibrate(stage, e)
+            if stage.running():
+                started = min(
+                    (t.start_time for t in stage.tasks if t.start_time >= 0),
+                    default=now,
+                )
+                e = max(0.0, e - (now - started))
+            est[name] = e
+
+        if mode == "sum":
+            return float(sum(est.values()))
+        # critical path over unfinished stages (finished contribute 0)
+        order = self.app.topo_order()
+        dist: Dict[str, float] = {}
+        for n in order:
+            if n not in job.stages:
+                continue
+            pmax = max((dist.get(p, 0.0) for p in self.app.parents(n)), default=0.0)
+            dist[n] = pmax + est.get(n, 0.0)
+        # realized dynamic inner stages live outside the template order
+        extra = sum(
+            est.get(n, 0.0) for n in est if n not in dist
+        )
+        return float(max(dist.values(), default=0.0) + extra)
+
+    def job_bounds(self, job: Job, use_bn: bool = True) -> Tuple[float, float]:
+        """[lo, hi] of the job's remaining-duration distribution (line 5)."""
+        ev = self.evidence_for(job) if use_bn else {}
+        lo = hi = 0.0
+        for name, stage in job.stages.items():
+            if stage.obs_done():
+                continue
+            l, h = self.stage_bounds(name, ev) if self._fitted else (0.0, 1.0)
+            lo += l
+            hi += h
+        return (lo, hi)
+
+    # ------------------------------------------------- uncertainty reduction
+    def stage_uncertainty_reduction(self, job: Job, stage_name: str) -> float:
+        """R(stage) for Algorithm 1 line 8 (Eq. 6 + dynamic bonus)."""
+        if not self._fitted:
+            return 0.0
+        ev = self.evidence_for(job)
+        unscheduled = [
+            name
+            for name, s in job.stages.items()
+            if not s.obs_done()
+            and not s.running()
+            and s.dispatched_tasks == 0
+        ]
+        key = (stage_name, tuple(sorted(unscheduled)), self._ev_key(ev))
+        hit = self._ur_cache.get(key)
+        if hit is not None:
+            return hit
+        bonus = 0.0
+        st = job.stages.get(stage_name)
+        if st is not None and st.stype is StageType.LLM:
+            # dynamic stages resolved by this LLM stage (its children)
+            for child in self.app.children(stage_name):
+                cst = job.stages.get(child)
+                if (
+                    cst is not None
+                    and cst.stype is StageType.DYNAMIC
+                    and not cst.revealed
+                ):
+                    h = self._dyn_entropy.get(child, 0.0)
+                    d = self.discretizers.get(child)
+                    post = self.marginal(child, ev) if d else None
+                    rng = d.range_span(post) if d is not None and post is not None else 1.0
+                    bonus += h * max(rng, 1e-6)
+        if stage_name not in self.bn.nodes:
+            self._ur_cache[key] = float(bonus)
+            return float(bonus)
+        out = uncertainty_reduction(
+            self.bn,
+            self.discretizers,
+            stage_name,
+            unscheduled,
+            ev,
+            dynamic_bonus=bonus,
+        )
+        self._ur_cache[key] = out
+        return out
+
+
+class ProfileStore:
+    """Profiles for all applications, keyed by template name."""
+
+    def __init__(self) -> None:
+        self.profiles: Dict[str, AppProfile] = {}
+
+    def fit(self, apps: Sequence[ApplicationTemplate], traces: Sequence[JobTrace],
+            **kw) -> "ProfileStore":
+        by_app: Dict[str, List[JobTrace]] = {}
+        for t in traces:
+            by_app.setdefault(t.app_name, []).append(t)
+        for app in apps:
+            prof = AppProfile(app)
+            if by_app.get(app.name):
+                prof.fit(by_app[app.name], **kw)
+            self.profiles[app.name] = prof
+        return self
+
+    def __getitem__(self, name: str) -> AppProfile:
+        return self.profiles[name]
+
+    def get(self, name: str) -> Optional[AppProfile]:
+        return self.profiles.get(name)

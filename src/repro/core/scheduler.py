@@ -1,0 +1,244 @@
+"""Uncertainty-aware scheduler — Algorithm 1 of the paper (§IV-D).
+
+Schedulers are shared between the discrete-event simulator (`repro.sim`)
+and the real serving runtime (`repro.serving`): both call
+:meth:`Scheduler.schedule` with the current unfinished jobs and a
+:class:`ClusterView`, and dispatch tasks greedily from the returned
+preference lists (``T_r`` for regular executors, ``T_l`` for LLM
+executors) onto free capacity.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .calibration import LatencyProfile
+from .dag import Job, Stage, StageType, Task
+from .profiler import ProfileStore
+
+
+@dataclass
+class ClusterView:
+    """What the scheduler may observe about the cluster."""
+
+    now: float
+    free_regular: int
+    # per-LLM-executor (running batch size, max batch size)
+    llm_loads: List[Tuple[int, int]]
+    latency_profile: Optional[LatencyProfile] = None
+
+    def llm_free_slots(self) -> int:
+        return sum(max(0, mb - b) for b, mb in self.llm_loads)
+
+    def current_batch(self) -> int:
+        return max((b for b, _ in self.llm_loads), default=0)
+
+    def target_batch(self) -> int:
+        """Batch size an incoming task is likely to run at (for Eq. 2)."""
+        if not self.llm_loads:
+            return 1
+        b, mb = min(self.llm_loads, key=lambda t: t[0])
+        return min(b + 1, mb)
+
+
+@dataclass
+class Decision:
+    """Ordered scheduling preference lists (Algorithm 1 output)."""
+
+    regular: List[Task] = field(default_factory=list)
+    llm: List[Task] = field(default_factory=list)
+
+
+class Scheduler:
+    name = "base"
+
+    def schedule(self, jobs: Sequence[Job], view: ClusterView) -> Decision:
+        raise NotImplementedError
+
+    # Hook for schedulers that learn online (Decima).
+    def observe_completion(self, job: Job, now: float) -> None:  # pragma: no cover
+        pass
+
+
+# ---------------------------------------------------------------------------
+# LLMSched (Algorithm 1)
+# ---------------------------------------------------------------------------
+class LLMSched(Scheduler):
+    """ε-greedy combination of uncertainty reduction and SRTF.
+
+    ``use_bn=False``           → "LLMSched w/o BN" ablation (historical means).
+    ``epsilon=0``              → "LLMSched w/o uncertainty" ablation (pure SRTF).
+    """
+
+    name = "llmsched"
+
+    def __init__(
+        self,
+        profiles: ProfileStore,
+        epsilon: float = 0.3,
+        sampling_ratio: float = 0.3,
+        use_bn: bool = True,
+        seed: int = 0,
+    ) -> None:
+        self.profiles = profiles
+        self.epsilon = float(epsilon)
+        self.sampling_ratio = float(sampling_ratio)
+        self.use_bn = use_bn
+        self.rng = np.random.default_rng(seed)
+        # caches invalidated per-call; uncertainty scores are reused across
+        # ε draws within one invocation.
+        self._ur_cache: Dict[Tuple[int, str], float] = {}
+
+    # -- helpers -------------------------------------------------------------
+    def _calibrator(self, view: ClusterView) -> Callable[[Stage, float], float]:
+        prof = view.latency_profile
+        if prof is None:
+            return lambda stage, est: est
+
+        b_t = view.target_batch()
+
+        def cal(stage: Stage, est: float) -> float:
+            if stage.stype is StageType.LLM:
+                # historical estimates are recorded at batch size 1
+                return prof.calibrate(est, b_r=1, b_t=b_t)
+            return est
+
+        return cal
+
+    def est_rd(self, job: Job, view: ClusterView) -> float:
+        p = self.profiles.get(job.app.name)
+        if p is None:
+            return float("inf")
+        return p.est_remaining(
+            job, view.now, calibrate=self._calibrator(view), use_bn=self.use_bn
+        )
+
+    def _uncert(self, job: Job, stage: Stage) -> float:
+        key = (job.job_id, stage.name)
+        if key not in self._ur_cache:
+            p = self.profiles.get(job.app.name)
+            self._ur_cache[key] = (
+                p.stage_uncertainty_reduction(job, stage.name) if p else 0.0
+            )
+        return self._ur_cache[key]
+
+    @staticmethod
+    def non_overlapping_sets(
+        bounds: List[Tuple[float, float, Job]]
+    ) -> List[List[Job]]:
+        """Group jobs whose duration intervals overlap (line 5).
+
+        Jobs within a group cannot be ordered with certainty; between
+        groups the ordering is certain.  Groups come back ordered by lower
+        bound.
+        """
+        if not bounds:
+            return []
+        bounds = sorted(bounds, key=lambda t: (t[0], t[1]))
+        groups: List[List[Job]] = [[bounds[0][2]]]
+        cur_hi = bounds[0][1]
+        for lo, hi, job in bounds[1:]:
+            if lo <= cur_hi:  # overlaps current group
+                groups[-1].append(job)
+                cur_hi = max(cur_hi, hi)
+            else:
+                groups.append([job])
+                cur_hi = hi
+        return groups
+
+    # -- Algorithm 1 -----------------------------------------------------------
+    def schedule(self, jobs: Sequence[Job], view: ClusterView) -> Decision:
+        self._ur_cache.clear()
+        jobs = [j for j in jobs if not j.done()]
+        if not jobs:
+            return Decision()
+
+        # lines 1-4: S_t — ready stages in SRTF order of their job
+        j_t = sorted(jobs, key=lambda j: (self.est_rd(j, view), j.arrival_time))
+        s_t: List[Stage] = []
+        for job in j_t:
+            s_t.extend(job.ready_stages())
+
+        # lines 5-10: S_u — stages by uncertainty reduction within
+        # non-overlapping job groups
+        bounds = []
+        for job in jobs:
+            p = self.profiles.get(job.app.name)
+            lo, hi = p.job_bounds(job, use_bn=self.use_bn) if p else (0.0, math.inf)
+            bounds.append((lo, hi, job))
+        s_u: List[Stage] = []
+        for group in self.non_overlapping_sets(bounds):
+            stages = []
+            for job in group:
+                stages.extend(job.ready_stages())
+            # only genuinely uncertainty-reducing stages are exploration
+            # candidates (paper §IV-B: stages correlated with ≥1 other)
+            scored = [(self._uncert_for(s, jobs), s) for s in stages]
+            scored = [(r, s) for r, s in scored if r > 0.0]
+            scored.sort(key=lambda t: -t[0])
+            s_u.extend(s for _, s in scored)
+
+        # lines 11-20: ε-greedy merge
+        return self._merge(s_t, s_u)
+
+    def _uncert_for(self, stage: Stage, jobs: Sequence[Job]) -> float:
+        job = next(j for j in jobs if j.job_id == stage.job_id)
+        return self._uncert(job, stage)
+
+    def _merge(self, s_t: List[Stage], s_u: List[Stage]) -> Decision:
+        dec = Decision()
+        taken: set = set()
+        deferred: List[Task] = []
+        s_t = list(s_t)
+        s_u = list(s_u)
+
+        def pop_next(lst: List[Stage]) -> Optional[Stage]:
+            while lst:
+                s = lst.pop(0)
+                if id(s) not in taken:
+                    return s
+            return None
+
+        def attach(tasks: List[Task]) -> None:
+            for t in tasks:
+                (dec.llm if t.is_llm else dec.regular).append(t)
+
+        while s_t and s_u:
+            st = pop_next(s_t)
+            su = pop_next(s_u)
+            if st is None and su is None:
+                break
+            p = self.rng.random()
+            if p < self.epsilon and su is not None:
+                taken.add(id(su))
+                pending = su.pending_tasks()
+                if su is st:
+                    # exploration pick coincides with the SRTF head: run it
+                    # fully — sampling would only defer the exploit choice.
+                    attach(pending)
+                    continue
+                k = max(1, math.ceil(self.sampling_ratio * len(pending)))
+                attach(pending[:k])
+                deferred.extend(pending[k:])
+                if st is not None:
+                    s_t.insert(0, st)  # not consumed this round
+            elif st is not None:
+                taken.add(id(st))
+                attach(st.pending_tasks())
+                if su is not None:
+                    s_u.insert(0, su)
+            elif su is not None:
+                taken.add(id(su))
+                attach(su.pending_tasks())
+
+        # line 21: whatever list still has stages + sampled remainders
+        for s in s_t + s_u:
+            if id(s) not in taken:
+                taken.add(id(s))
+                attach(s.pending_tasks())
+        attach(deferred)
+        return dec

@@ -1,0 +1,167 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallbacks.
+
+Weights/activations are annotated with *logical* axis names; a rule table
+maps each name to an ordered list of candidate mesh axes.  The first
+candidate whose size divides the dimension is used — e.g. kv-head dims of
+GQA models (8 heads) fall back to replication on a 16-wide ``model`` axis
+instead of producing an invalid sharding.
+
+The active mesh + rules live in a context variable so model code can call
+:func:`constrain` unconditionally; with no mesh set it is a no-op (single-
+device smoke tests).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> ordered candidate mesh-axis tuples (first that divides wins)
+# None (replicate) is always the final fallback.
+Rules = Dict[str, List[Optional[Union[str, Tuple[str, ...]]]]]
+
+DEFAULT_RULES: Rules = {
+    # activations
+    "batch": [("pod", "data"), "data"],
+    "dec_batch": [("pod", "data"), "data"],  # decode residual stream; the
+                                             # serve_opt variant replicates
+                                             # it (weight-stationary decode)
+    "seq": [None],
+    "seq_act": [None],                   # sequence parallel variant: ["model"]
+    "kv_seq": ["model", None],           # decode KV-cache sequence dim
+    "embed_act": [None],
+    "heads_act": ["model", None],
+    "ff_act": ["model", None],
+    "vocab_act": ["model", None],
+    # weights (2D: tensor axis on `model`, fsdp axis on `data`)
+    "embed": ["data", None],             # fsdp / ZeRO-3 dim of weights
+    "vocab": ["model", None],
+    "heads": ["model", None],
+    "kv_heads": ["model", None],
+    "ff": ["model", None],
+    "experts": ["model", None],
+    "experts_ep": ["data", None],   # EP: expert dim over the data axis
+    "expert_ff": ["data", None],
+    "head_dim": [None],
+    "lora": [None],
+    "state": [None],
+    "conv": [None],
+    "none": [None],
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self) -> None:
+        self.mesh: Optional[Mesh] = None
+        self.rules: Rules = dict(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Rules] = None):
+    """Activate a mesh + rule table for logical sharding resolution."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = {**DEFAULT_RULES, **(rules or {})}
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _axis_size(mesh: Mesh, axis: Union[str, Tuple[str, ...]]) -> int:
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def resolve_spec(
+    logical: Sequence[Optional[str]],
+    dim_sizes: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+    rules: Optional[Rules] = None,
+) -> P:
+    """Logical names -> PartitionSpec under the active mesh and rules.
+
+    ``dim_sizes`` enables divisibility fallbacks; without it the first
+    candidate present in the mesh is used.  Mesh axes are never assigned
+    twice in one spec (XLA requirement).
+    """
+    mesh = mesh or _CTX.mesh
+    rules = rules or _CTX.rules
+    if mesh is None:
+        return P()
+    used: set = set()
+    out: List[Optional[Union[str, Tuple[str, ...]]]] = []
+    for i, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        cands = rules.get(name, [None])
+        picked = None
+        for cand in cands:
+            if cand is None:
+                break
+            axes = cand if isinstance(cand, tuple) else (cand,)
+            if any(a not in mesh.shape for a in axes):
+                continue
+            if any(a in used for a in axes):
+                continue
+            if dim_sizes is not None:
+                size = _axis_size(mesh, cand)
+                if dim_sizes[i] % size != 0:
+                    continue
+            picked = cand
+            break
+        if picked is not None:
+            used.update(picked if isinstance(picked, tuple) else (picked,))
+        out.append(picked)
+    return P(*out)
+
+
+def named_sharding(
+    logical: Sequence[Optional[str]],
+    dim_sizes: Optional[Sequence[int]] = None,
+    mesh: Optional[Mesh] = None,
+) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(logical, dim_sizes, mesh))
+
+
+def constrain(x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+    """with_sharding_constraint under the active mesh; no-op without one."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def tree_shardings(spec_tree, shape_tree, mesh: Optional[Mesh] = None):
+    """Map a pytree of logical-name tuples + matching shapes -> NamedShardings."""
+    mesh = mesh or _CTX.mesh
+
+    def one(logical, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else shaped
+        return NamedSharding(mesh, resolve_spec(logical, shape, mesh))
+
+    return jax.tree.map(
+        one, spec_tree, shape_tree, is_leaf=lambda x: isinstance(x, tuple)
+    )

@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantics ground truth: kernels/tests assert allclose
+against these, and they double as the portable CPU path used by smoke
+tests and the 512-device dry-run (Mosaic lowering needs real TPUs).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Attention (prefill/train): GQA + causal
+# ---------------------------------------------------------------------------
+def attention_ref(
+    q: jax.Array,            # (B, S_q, H, hd)
+    k: jax.Array,            # (B, S_k, K, hd)
+    v: jax.Array,            # (B, S_k, K, hd)
+    causal: bool = True,
+    scale: Optional[float] = None,
+    q_offset: int = 0,       # absolute position of q[0] (cached prefix len)
+    kv_len: Optional[jax.Array] = None,  # (B,) valid kv length per batch
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    _, Sk, K, _ = k.shape
+    hd_v = v.shape[-1]            # MLA: v head dim may differ from q/k
+    g = H // K
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.astype(jnp.float32) * scale
+    qf = qf.reshape(B, Sq, K, g, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    mask = jnp.zeros((B, 1, 1, Sq, Sk), dtype=jnp.float32)
+    if causal:
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = mask + jnp.where(kpos > qpos, NEG_INF, 0.0)[None, None, None]
+    if kv_len is not None:
+        valid = jnp.arange(Sk)[None, :] < kv_len[:, None]
+        mask = mask + jnp.where(valid, 0.0, NEG_INF)[:, None, None, None, :]
+    w = jax.nn.softmax(logits + mask, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd_v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention: single query token vs KV cache with valid lengths
+# ---------------------------------------------------------------------------
+def decode_attention_ref(
+    q: jax.Array,            # (B, H, hd)
+    k_cache: jax.Array,      # (B, S, K, hd)
+    v_cache: jax.Array,      # (B, S, K, hd)
+    lengths: jax.Array,      # (B,) int32 — valid cache entries
+    scale: Optional[float] = None,
+) -> jax.Array:
+    B, H, hd = q.shape
+    _, S, K, _ = k_cache.shape
+    hd_v = v_cache.shape[-1]      # MLA: v head dim may differ from q/k
+    g = H // K
+    scale = scale if scale is not None else hd ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, K, g, hd)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32))
+    valid = jnp.arange(S)[None, :] < lengths[:, None]          # (B, S)
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[:, None, None, :]
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", w, v_cache.astype(jnp.float32))
+    return out.reshape(B, H, hd_v).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba selective scan (SSM):  h_t = dA_t ⊙ h_{t-1} + dB_t x_t ;  y = C_t·h
+# ---------------------------------------------------------------------------
+def ssm_scan_ref(
+    x: jax.Array,       # (B, T, D)  post-conv activations
+    dt: jax.Array,      # (B, T, D)  softplus'd step sizes
+    A: jax.Array,       # (D, N)     negative decay matrix
+    Bm: jax.Array,      # (B, T, N)  input matrix
+    Cm: jax.Array,      # (B, T, N)  output matrix
+    D: jax.Array,       # (D,)       skip
+    h0: Optional[jax.Array] = None,  # (B, D, N) initial state
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y (B,T,D), h_T (B,D,N)). float32 state math."""
+    Bsz, T, Dd = x.shape
+    N = A.shape[1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+    h = jnp.zeros((Bsz, Dd, N), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp  # (B,D), (B,D), (B,N), (B,N)
+        dA = jnp.exp(dtt[..., None] * Af[None])          # (B, D, N)
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]     # (B, D, N)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)
+        return h, y
+
+    xs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(Bf, 1, 0),
+        jnp.moveaxis(Cf, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D.astype(jnp.float32)[None, None, :]
+    return y.astype(x.dtype), h

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — smoke tests must keep seeing one
+CPU device; only dryrun.py sets XLA_FLAGS for 512 host devices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16×16 = 256 chips per pod; 2 pods = 512 chips with a leading
+    ``pod`` axis (data parallel across the inter-pod DCN/ICI links)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Optional[Mesh]:
+    """Single-host debug mesh over however many devices exist (≥2)."""
+    n = len(jax.devices())
+    if n < 2:
+        return None
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,30 @@
+"""Architecture zoo: composable JAX models for all assigned architectures."""
+
+from .config import (
+    SHAPES,
+    EncoderConfig,
+    MLAConfig,
+    MambaConfig,
+    MoEConfig,
+    ModelConfig,
+    ShapeConfig,
+    XLSTMConfig,
+    shape_applicable,
+)
+from .transformer import (
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    layer_kind,
+    lm_loss,
+    prefill,
+    superblock_len,
+)
+
+__all__ = [
+    "SHAPES", "EncoderConfig", "MLAConfig", "MambaConfig", "MoEConfig",
+    "ModelConfig", "ShapeConfig", "XLSTMConfig", "shape_applicable",
+    "decode_step", "forward", "init_cache", "init_params", "layer_kind",
+    "lm_loss", "prefill", "superblock_len",
+]

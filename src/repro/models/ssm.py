@@ -1,0 +1,243 @@
+"""State-space / recurrent blocks: Mamba (Jamba's SSM layers) and xLSTM.
+
+Mamba-1 selective scan, faithful to Gu & Dao: in-proj → causal depthwise
+conv → data-dependent (Δ, B, C) → selective state-space scan → gate →
+out-proj.  The scan itself runs through :func:`repro.kernels.ops.ssm_scan`
+(Pallas kernel on TPU, jnp oracle elsewhere).
+
+xLSTM (Beck et al. 2024): mLSTM blocks (matrix memory, exponential gating)
+with an sLSTM block every ``slstm_every`` layers.  We implement the
+recurrent cells with ``lax.scan``; the sLSTM uses per-head elementwise
+recurrence (block-diagonal simplification — noted in DESIGN.md).
+
+Both expose full-sequence (train/prefill) and single-step (decode) forms;
+decode state is O(1) in sequence length, which is why these archs run the
+``long_500k`` shape.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from .config import ModelConfig
+from .layers import Maker, Params
+
+
+# ---------------------------------------------------------------------------
+# Mamba
+# ---------------------------------------------------------------------------
+def _dt_rank(cfg: ModelConfig) -> int:
+    m = cfg.mamba
+    return m.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(mk: Maker, cfg: ModelConfig) -> None:
+    m = cfg.mamba
+    d = cfg.d_model
+    di = d * m.expand
+    r = _dt_rank(cfg)
+    mk.dense("in_proj", (d, 2 * di), ("embed", "ff"))
+    mk.dense("conv_w", (m.d_conv, di), ("conv", "ff"))
+    mk.dense("conv_b", (di,), ("ff",), zeros=True)
+    mk.dense("x_proj", (di, r + 2 * m.d_state), ("ff", None))
+    mk.dense("dt_proj", (r, di), (None, "ff"))
+    mk.dense("dt_bias", (di,), ("ff",), zeros=True)
+    # A_log init: log(1..N) rows (S4D-real)
+    a = jnp.broadcast_to(jnp.arange(1, m.d_state + 1, dtype=jnp.float32), (di, m.d_state))
+    mk.f32("A_log", jnp.log(a), ("ff", "state"))
+    mk.dense("D", (di,), ("ff",), ones=True)
+    mk.dense("out_proj", (di, d), ("ff", "embed"))
+
+
+def _mamba_ssm_inputs(p: Params, cfg: ModelConfig, xz: jax.Array):
+    m = cfg.mamba
+    r = _dt_rank(cfg)
+    di = cfg.d_model * m.expand
+    x, z = xz[..., :di], xz[..., di:]
+    return x, z, r, di
+
+
+def mamba_full(
+    p: Params, cfg: ModelConfig, x_in: jax.Array,
+    state: Optional[Dict[str, jax.Array]] = None,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence Mamba block.  Returns (out, final_state)."""
+    m = cfg.mamba
+    B, S, d = x_in.shape
+    xz = x_in @ p["in_proj"]
+    x, z, r, di = _mamba_ssm_inputs(p, cfg, xz)
+
+    # causal depthwise conv over time (kernel d_conv)
+    pad = jnp.zeros((B, m.d_conv - 1, di), x.dtype) if state is None else state["conv"]
+    xp = jnp.concatenate([pad, x], axis=1)
+    conv_state = xp[:, -(m.d_conv - 1):, :] if m.d_conv > 1 else xp[:, :0]
+    x = sum(
+        xp[:, i : i + S, :] * p["conv_w"][i][None, None, :]
+        for i in range(m.d_conv)
+    ) + p["conv_b"]
+    x = jax.nn.silu(x)
+
+    proj = x @ p["x_proj"]
+    dt = jax.nn.softplus(proj[..., :r] @ p["dt_proj"] + p["dt_bias"])
+    Bm = proj[..., r : r + m.d_state]
+    Cm = proj[..., r + m.d_state :]
+    A = -jnp.exp(p["A_log"])
+    h0 = state["ssm"] if state is not None else None
+    y, h = ops.ssm_scan(x, dt, A, Bm, Cm, p["D"], h0=h0)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"conv": conv_state, "ssm": h}
+
+
+def mamba_decode(
+    p: Params, cfg: ModelConfig, x_in: jax.Array, state: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token step; state = {conv (B, d_conv-1, di), ssm (B, di, N)}."""
+    return mamba_full(p, cfg, x_in, state=state)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, Any]:
+    m = cfg.mamba
+    di = cfg.d_model * m.expand
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+def init_mlstm(mk: Maker, cfg: ModelConfig) -> None:
+    x = cfg.xlstm
+    d = cfg.d_model
+    di = int(d * x.proj_factor)
+    mk.dense("up_proj", (d, 2 * di), ("embed", "ff"))
+    mk.dense("wq", (di, di), ("ff", None))
+    mk.dense("wk", (di, di), ("ff", None))
+    mk.dense("wv", (di, di), ("ff", None))
+    mk.dense("w_i", (di, x.n_heads), ("ff", None))
+    mk.dense("w_f", (di, x.n_heads), ("ff", None))
+    mk.dense("w_o", (di, di), ("ff", None))
+    mk.dense("down_proj", (di, d), ("ff", "embed"))
+
+
+def _mlstm_cell(q, k, v, i_gate, f_gate, C, n):
+    """One mLSTM step.  C: (B,H,hd,hd) matrix memory, n: (B,H,hd)."""
+    C = f_gate[..., None, None] * C + i_gate[..., None, None] * (
+        v[..., :, None] * k[..., None, :]
+    )
+    n = f_gate[..., None] * n + i_gate[..., None] * k
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, q)), 1.0)
+    y = jnp.einsum("bhde,bhe->bhd", C, q) / denom[..., None]
+    return y, C, n
+
+
+def mlstm_full(p: Params, cfg: ModelConfig, x_in: jax.Array,
+               state=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xc = cfg.xlstm
+    B, S, d = x_in.shape
+    di = int(d * xc.proj_factor)
+    H = xc.n_heads
+    hd = di // H
+    up = x_in @ p["up_proj"]
+    u, z = up[..., :di], up[..., di:]
+    q = (u @ p["wq"]).reshape(B, S, H, hd)
+    k = (u @ p["wk"]).reshape(B, S, H, hd) / math.sqrt(hd)
+    v = (u @ p["wv"]).reshape(B, S, H, hd)
+    # stabilized exponential gating (log-space accumulation)
+    i_pre = (u @ p["w_i"]).astype(jnp.float32)          # (B,S,H)
+    f_pre = (u @ p["w_f"]).astype(jnp.float32)
+    log_f = -jax.nn.softplus(-f_pre)                     # log sigmoid(f)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, H, hd), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def step(carry, inp):
+        C, n, mst = carry
+        qt, kt, vt, it, lft = inp
+        m_new = jnp.maximum(lft + mst, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(lft + mst - m_new)
+        y, C, n = _mlstm_cell(
+            qt.astype(jnp.float32), kt.astype(jnp.float32),
+            vt.astype(jnp.float32), i_g, f_g, C, n,
+        )
+        return (C, n, m_new), y
+
+    xs = tuple(
+        jnp.moveaxis(a, 1, 0)
+        for a in (q, k, v, i_pre, log_f)
+    )
+    (C, n, mst), ys = jax.lax.scan(step, (C0, n0, m0), xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di).astype(x_in.dtype)
+    y = y * jax.nn.silu(z)
+    out = (y * jax.nn.sigmoid(u @ p["w_o"])) @ p["down_proj"]
+    return out, {"C": C, "n": n, "m": mst}
+
+
+def init_slstm(mk: Maker, cfg: ModelConfig) -> None:
+    d = cfg.d_model
+    H = cfg.xlstm.n_heads
+    mk.dense("w_izfo", (d, 4 * d), ("embed", "ff"))
+    mk.dense("r_izfo", (4 * d,), ("ff",), zeros=True)  # diagonal recurrence
+    mk.dense("out_proj", (d, d), (None, "embed"))
+
+
+def slstm_full(p: Params, cfg: ModelConfig, x_in: jax.Array,
+               state=None) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, d = x_in.shape
+    pre = (x_in @ p["w_izfo"]).astype(jnp.float32)       # (B,S,4d)
+    if state is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.ones((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), jnp.float32)
+        m0 = jnp.full((B, d), -1e30, jnp.float32)
+    else:
+        c0, n0, h0, m0 = state["c"], state["n"], state["h"], state["m"]
+    r = p["r_izfo"].astype(jnp.float32)
+
+    def step(carry, zt):
+        c, n, h, mst = carry
+        rec = jnp.concatenate([h, h, h, h], axis=-1) * r[None]
+        zi, zz, zf, zo = jnp.split(zt + rec, 4, axis=-1)
+        log_f = -jax.nn.softplus(-zf)
+        m_new = jnp.maximum(log_f + mst, zi)
+        i_g = jnp.exp(zi - m_new)
+        f_g = jnp.exp(log_f + mst - m_new)
+        c = f_g * c + i_g * jnp.tanh(zz)
+        n = f_g * n + i_g
+        h = jax.nn.sigmoid(zo) * c / jnp.maximum(n, 1.0)
+        return (c, n, h, m_new), h
+
+    (c, n, h, mst), ys = jax.lax.scan(step, (c0, n0, h0, m0), jnp.moveaxis(pre, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).astype(x_in.dtype)
+    out = y @ p["out_proj"]
+    return out, {"c": c, "n": n, "h": h, "m": mst}
+
+
+def xlstm_init_state(cfg: ModelConfig, batch: int, is_slstm: bool) -> Dict[str, Any]:
+    d = cfg.d_model
+    x = cfg.xlstm
+    if is_slstm:
+        return {
+            "c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.ones((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+        }
+    di = int(d * x.proj_factor)
+    hd = di // x.n_heads
+    return {
+        "C": jnp.zeros((batch, x.n_heads, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, x.n_heads, hd), jnp.float32),
+        "m": jnp.full((batch, x.n_heads), -1e30, jnp.float32),
+    }

@@ -1,0 +1,177 @@
+"""Step builders + input specs for every (architecture × input shape) cell.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, no device allocation — used by
+the multi-pod dry-run and the roofline analysis.
+
+``build_train_step`` / ``build_decode_step`` / ``build_prefill_step``
+return pure functions suitable for ``jax.jit(..., in_shardings=...)``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.optimizer import OptConfig, adamw_update, init_opt_state
+from ..distributed.sharding import resolve_spec
+from .config import ModelConfig, ShapeConfig
+from . import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — dry-run currency)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = sds((B, S), jnp.int32)
+        out["targets"] = sds((B, S), jnp.int32)
+    elif shape.kind == "prefill":
+        out["tokens"] = sds((B, S), jnp.int32)
+    else:  # decode: one new token against a cache of length S
+        out["tokens"] = sds((B,), jnp.int32)
+        max_len = ((S + 8 + 255) // 256) * 256   # shardable cache length
+        out["cache"] = jax.eval_shape(
+            lambda: T.init_cache(cfg, B, max_len)
+        )
+    if cfg.family == "vlm" and shape.kind != "decode":
+        out["enc_input"] = sds((B, cfg.encoder.n_ctx, cfg.d_model), cfg.jdtype)
+    if cfg.family == "audio" and shape.kind != "decode":
+        out["enc_input"] = sds((B, cfg.encoder.n_ctx, cfg.d_model), cfg.jdtype)
+    return out
+
+
+# logical sharding for inputs
+def input_logical(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    out: Dict[str, Any] = {}
+    if shape.kind == "train":
+        out["tokens"] = ("batch", None)
+        out["targets"] = ("batch", None)
+    elif shape.kind == "prefill":
+        out["tokens"] = ("batch", None)
+    else:
+        out["tokens"] = ("batch",)
+        out["cache"] = "__cache__"   # resolved by cache_logical()
+    if cfg.family in ("vlm", "audio") and shape.kind != "decode":
+        out["enc_input"] = ("batch", None, None)
+    return out
+
+
+def cache_logical(cfg: ModelConfig, cache_shapes, model_axis_size: int):
+    """Logical names for every cache leaf, chosen per-arch: KV heads shard
+    over ``model`` when divisible, otherwise the cache sequence dim does
+    (flash-decode style; XLA inserts the partial-softmax reductions)."""
+    heads_divisible = model_axis_size > 0 and cfg.n_kv_heads % model_axis_size == 0
+    kv_heads = "kv_heads" if heads_divisible else None
+    kv_seq = None if heads_divisible else "kv_seq"
+
+    def map_leaf(path, x):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        nd = len(x.shape)
+        if any(getattr(p_, "key", None) == "__cross" for p_ in path):
+            base = (None, "batch", None, kv_heads, None)
+            return (None,) * max(0, nd - 5) + tuple(base)[-nd:]
+        if name in ("k", "v"):
+            base = ("batch", kv_seq, kv_heads, None)
+        elif name in ("k_s", "v_s"):
+            base = ("batch", kv_seq, kv_heads)
+        elif name in ("c_kv", "k_rope"):
+            base = ("batch", kv_seq, None)
+        elif name == "lengths":
+            base = ("batch",)
+        elif name in ("conv", "ssm", "C", "n", "m", "c", "h"):
+            base = ("batch",) + (None,) * (nd - 1)
+            base = base[:nd]
+        elif name in ("__cross_k", "__cross_v"):
+            base = ("batch", None, kv_heads, None)
+        else:
+            base = (None,) * nd
+        pad = nd - len(base)
+        return (None,) * pad + tuple(base) if pad >= 0 else tuple(base)[-nd:]
+
+    return jax.tree_util.tree_map_with_path(map_leaf, cache_shapes)
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, opt_cfg: Optional[OptConfig] = None):
+    opt_cfg = opt_cfg or OptConfig()
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return T.lm_loss(
+                p, cfg, batch["tokens"], batch["targets"],
+                enc_input=batch.get("enc_input"),
+            )
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_params, new_state, metrics = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, max_len: Optional[int] = None):
+    def prefill_step(params, batch):
+        tokens = batch["tokens"]
+        ml = max_len or (tokens.shape[1] + 8)
+        return T.prefill(params, cfg, tokens, max_len=ml,
+                         enc_input=batch.get("enc_input"))
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig):
+    def serve_step(params, batch):
+        return T.decode_step(params, cfg, batch["cache"], batch["tokens"])
+
+    return serve_step
+
+
+def build_forward(cfg: ModelConfig):
+    def fwd(params, batch):
+        logits, _ = T.forward(params, cfg, batch["tokens"],
+                              enc_input=batch.get("enc_input"))
+        return logits
+
+    return fwd
+
+
+# ---------------------------------------------------------------------------
+# Param/opt-state shapes + shardings (dry-run helpers)
+# ---------------------------------------------------------------------------
+_SPEC_CACHE: Dict[str, Any] = {}
+
+
+def param_shapes(cfg: ModelConfig) -> Tuple[Any, Any]:
+    """(shape_tree, spec_tree) via eval_shape — no allocation.  The spec
+    tree is built as a (static) side effect of tracing init_params."""
+    key = (cfg.name, cfg.n_layers)
+    if key not in _SPEC_CACHE:
+        box: Dict[str, Any] = {}
+
+        def init():
+            p, s = T.init_params(cfg, jax.random.key(0))
+            box["specs"] = s
+            return p
+
+        shapes = jax.eval_shape(init)
+        _SPEC_CACHE[key] = (shapes, box["specs"])
+    return _SPEC_CACHE[key]
+
+
+def opt_state_shapes(cfg: ModelConfig, opt_cfg: OptConfig, params_shapes):
+    return jax.eval_shape(
+        lambda: init_opt_state(
+            jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), params_shapes),
+            opt_cfg,
+        )
+    )

@@ -1,0 +1,6 @@
+"""Serving runtime: continuous-batching engines + compound-job testbed."""
+
+from .engine import LLMEngine, Request
+from .cluster import ServingCluster, TestbedResult
+
+__all__ = ["LLMEngine", "Request", "ServingCluster", "TestbedResult"]

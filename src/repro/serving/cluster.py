@@ -1,0 +1,202 @@
+"""Testbed runtime: compound LLM jobs over REAL engines (paper §V-B analog).
+
+Wall-clock event loop driving:
+- ``n_llm`` :class:`LLMEngine` instances (tiny model, real jitted decode);
+- ``n_regular`` executor slots (deadline-based task completion);
+- any :class:`repro.core.scheduler.Scheduler` making admission decisions.
+
+LLM tasks become engine requests whose token budget is the task's
+``out_tokens`` (scaled by ``token_scale`` so CPU runs finish quickly);
+the engines' *measured* l(b) feeds Eq. 2 calibration, closing the same
+loop the paper's vLLM testbed closes.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.dag import Job, Stage, StageType, Task, TaskState
+from ..core.scheduler import ClusterView, Decision, Scheduler
+from ..sim.workloads import GeneratedJob, PlanningApp, get_generators
+from .engine import LLMEngine, Request
+
+
+@dataclass
+class TestbedResult:
+    jcts: List[float] = field(default_factory=list)
+    sched_overhead_s: List[float] = field(default_factory=list)
+    makespan: float = 0.0
+    tokens_generated: int = 0
+
+    @property
+    def avg_jct(self) -> float:
+        return float(np.mean(self.jcts)) if self.jcts else 0.0
+
+    @property
+    def avg_overhead_ms(self) -> float:
+        return (
+            1e3 * float(np.mean(self.sched_overhead_s))
+            if self.sched_overhead_s
+            else 0.0
+        )
+
+
+class ServingCluster:
+    def __init__(
+        self,
+        scheduler: Scheduler,
+        engines: List[LLMEngine],
+        n_regular: int = 4,
+        token_scale: float = 8.0,
+        time_scale: float = 8.0,
+        min_tokens: int = 2,
+    ) -> None:
+        self.scheduler = scheduler
+        self.engines = engines
+        self.n_regular = n_regular
+        self.token_scale = token_scale
+        self.time_scale = time_scale
+        self.min_tokens = min_tokens
+
+    def run(self, workload: Sequence[GeneratedJob]) -> TestbedResult:
+        gens = get_generators()
+        res = TestbedResult()
+        t_start = time.perf_counter()
+
+        def now() -> float:
+            return time.perf_counter() - t_start
+
+        jobs = sorted((gj.job for gj in workload), key=lambda j: j.arrival_time)
+        # arrival times are compressed by time_scale as well
+        arrivals = [(j.arrival_time / self.time_scale, j) for j in jobs]
+        job_by_id = {j.job_id: j for j in jobs}
+        active: List[Job] = []
+        ai = 0
+        reg_running: List[Optional[Tuple[float, Task]]] = [None] * self.n_regular
+        rid_counter = [0]
+
+        def on_stage_complete(job: Job, stage: Stage) -> None:
+            stage.revealed = True
+            for name in job.reveal_rules.get(stage.name, []):
+                job.stages[name].revealed = True
+            gen = gens.get(job.app.name)
+            for child in job.app.children(stage.name):
+                cst = job.stages.get(child)
+                if (
+                    cst is not None
+                    and cst.stype is StageType.DYNAMIC
+                    and not cst.revealed
+                    and isinstance(gen, PlanningApp)
+                ):
+                    gen.expand_dynamic(job, child)
+
+        def finish_task(task: Task) -> None:
+            task.state = TaskState.DONE
+            task.finish_time = now()
+            job = job_by_id[task.job_id]
+            stage = job.stages[task.stage_name]
+            if stage.done():
+                on_stage_complete(job, stage)
+            if job.done():
+                job.finish_time = now()
+                res.jcts.append(job.finish_time - job.arrival_time / self.time_scale)
+                if job in active:
+                    active.remove(job)
+
+        def dispatch(dec: Decision) -> None:
+            for t in dec.regular:
+                if t.state is not TaskState.PENDING:
+                    continue
+                placed = False
+                for e in range(self.n_regular):
+                    if reg_running[e] is None:
+                        t.state = TaskState.RUNNING
+                        t.start_time = now()
+                        job_by_id[t.job_id].stages[t.stage_name].dispatched_tasks += 1
+                        deadline = now() + t.true_duration / self.time_scale
+                        reg_running[e] = (deadline, t)
+                        placed = True
+                        break
+                if not placed:
+                    break
+            for t in dec.llm:
+                if t.state is not TaskState.PENDING:
+                    continue
+                # least-loaded engine with a free slot (paper §IV-D)
+                cands = [e for e in self.engines if e.can_admit()]
+                if not cands:
+                    break
+                eng = min(cands, key=lambda e: e.batch_size)
+                t.state = TaskState.RUNNING
+                t.start_time = now()
+                job_by_id[t.job_id].stages[t.stage_name].dispatched_tasks += 1
+                rid_counter[0] += 1
+                n_tok = max(self.min_tokens, int(t.out_tokens / self.token_scale))
+                prompt = [1 + (hash(t.stage_name) % 32), 2 + t.index % 7]
+                task = t
+
+                def _done(req: Request, task=task) -> None:
+                    res.tokens_generated += len(req.out_tokens)
+                    finish_task(task)
+
+                eng.admit(
+                    Request(
+                        rid=rid_counter[0],
+                        prompt=prompt,
+                        max_new_tokens=n_tok,
+                        submitted_at=now(),
+                        on_finish=_done,
+                    )
+                )
+
+        def view() -> ClusterView:
+            prof = None
+            for e in self.engines:
+                prof = e.latency_profile() or prof
+            return ClusterView(
+                now=now(),
+                free_regular=sum(1 for s in reg_running if s is None),
+                llm_loads=[(e.batch_size, e.max_batch) for e in self.engines],
+                latency_profile=prof,
+            )
+
+        # ------------------------- main loop -------------------------
+        while ai < len(arrivals) or active:
+            t = now()
+            # arrivals
+            while ai < len(arrivals) and arrivals[ai][0] <= t:
+                active.append(arrivals[ai][1])
+                ai += 1
+            # regular completions
+            for e in range(self.n_regular):
+                slot = reg_running[e]
+                if slot is not None and slot[0] <= t:
+                    reg_running[e] = None
+                    finish_task(slot[1])
+            # schedule + dispatch
+            t0 = time.perf_counter()
+            dec = self.scheduler.schedule(active, view())
+            res.sched_overhead_s.append(time.perf_counter() - t0)
+            dispatch(dec)
+            # decode step on each engine (the real compute)
+            stepped = False
+            for eng in self.engines:
+                if eng.batch_size:
+                    eng.step()
+                    stepped = True
+            if not stepped:
+                # idle: wait for next arrival or regular completion
+                nxt = [arrivals[ai][0]] if ai < len(arrivals) else []
+                nxt += [s[0] for s in reg_running if s is not None]
+                if nxt:
+                    time.sleep(max(0.0, min(nxt) - now()) + 1e-4)
+                elif not active:
+                    break
+                else:
+                    time.sleep(1e-3)
+        res.makespan = now()
+        return res

@@ -1,0 +1,170 @@
+"""Unit + property tests for the discrete Bayesian network (§IV-B)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bayesnet import (
+    BayesNet,
+    Factor,
+    eliminate,
+    fit_discretizer,
+)
+
+
+# ---------------------------------------------------------------------------
+# Factor algebra
+# ---------------------------------------------------------------------------
+def test_factor_product_marginalize():
+    fa = Factor(("a",), np.array([0.3, 0.7]))
+    fb = Factor(("b",), np.array([0.5, 0.5]))
+    prod = fa.product(fb)
+    assert prod.vars == ("a", "b")
+    np.testing.assert_allclose(prod.values.sum(), 1.0)
+    ma = prod.marginalize("b")
+    np.testing.assert_allclose(ma.values, [0.3, 0.7])
+
+
+def test_factor_reduce():
+    f = Factor(("a", "b"), np.arange(6, dtype=float).reshape(2, 3))
+    r = f.reduce("a", 1)
+    np.testing.assert_allclose(r.values, [3, 4, 5])
+    assert r.vars == ("b",)
+
+
+def test_eliminate_chain():
+    # a -> b: P(b) = sum_a P(a) P(b|a)
+    pa = Factor(("a",), np.array([0.2, 0.8]))
+    pba = Factor(("b", "a"), np.array([[0.9, 0.1], [0.1, 0.9]]))
+    out = eliminate([pa, pba], keep=["b"]).normalize()
+    np.testing.assert_allclose(out.values, [0.9 * 0.2 + 0.1 * 0.8,
+                                            0.1 * 0.2 + 0.9 * 0.8])
+
+
+# ---------------------------------------------------------------------------
+# Discretizer
+# ---------------------------------------------------------------------------
+def test_discretizer_zero_bin():
+    d = fit_discretizer([0.0, 0.0, 1.0, 2.0, 3.0, 4.0], max_bins=3)
+    assert d.has_zero_bin
+    assert d.transform(0.0) == 0
+    assert d.transform(10.0) == d.cardinality - 1
+
+
+@given(st.lists(st.floats(0.1, 1000.0), min_size=2, max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_discretizer_total_order(samples):
+    d = fit_discretizer(samples, max_bins=6)
+    # transform is monotone non-decreasing in duration
+    xs = sorted(samples)
+    bins = [d.transform(x) for x in xs]
+    assert bins == sorted(bins)
+    assert max(bins) < d.cardinality
+
+
+@given(st.lists(st.floats(0.1, 100.0), min_size=5, max_size=100))
+@settings(max_examples=30, deadline=None)
+def test_discretizer_expectation_in_range(samples):
+    d = fit_discretizer(samples, max_bins=6)
+    probs = np.ones(d.cardinality) / d.cardinality
+    e = d.expectation(probs)
+    assert 0.0 <= e <= max(samples) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# BN fit + inference
+# ---------------------------------------------------------------------------
+def _toy_bn(n=2000, seed=0):
+    """a ~ Bernoulli, b strongly correlated with a, c independent."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, n)
+    b = np.where(rng.random(n) < 0.9, a, 1 - a)
+    c = rng.integers(0, 3, n)
+    data = np.stack([a, b, c], axis=1)
+    bn = BayesNet().fit(
+        data, names=["a", "b", "c"], cards=[2, 2, 3],
+        template_edges=[("a", "b")],
+    )
+    return bn
+
+
+def test_bn_posterior_updates():
+    bn = _toy_bn()
+    prior_b = bn.marginal("b")
+    post_b = bn.marginal("b", {"a": 1})
+    assert post_b[1] > prior_b[1] + 0.2  # evidence sharpens prediction
+    assert abs(post_b.sum() - 1.0) < 1e-9
+
+
+def test_bn_independent_unchanged():
+    bn = _toy_bn()
+    prior_c = bn.marginal("c")
+    post_c = bn.marginal("c", {"a": 1})
+    np.testing.assert_allclose(prior_c, post_c, atol=0.05)
+
+
+def test_bn_correlated_path():
+    bn = _toy_bn()
+    assert bn.correlated("a", "b")
+    assert not bn.correlated("b", "a")  # directed
+    assert "a" in bn.uncertainty_reducing()
+
+
+def test_bn_joint_normalized():
+    bn = _toy_bn()
+    j = bn.joint(["a", "b"], {"c": 0})
+    assert abs(j.values.sum() - 1.0) < 1e-9
+    assert j.values.shape == (2, 2)
+
+
+# ---------------------------------------------------------------------------
+# Exact-inference property: variable elimination == brute-force enumeration
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10_000))
+@settings(max_examples=15, deadline=None)
+def test_bn_inference_matches_bruteforce(seed):
+    rng = np.random.default_rng(seed)
+    n_vars = int(rng.integers(3, 6))
+    cards = [int(rng.integers(2, 4)) for _ in range(n_vars)]
+    names = [f"v{i}" for i in range(n_vars)]
+    # random DAG data with chained dependencies
+    n = 500
+    cols = []
+    for i, c in enumerate(cards):
+        if i == 0 or rng.random() < 0.3:
+            cols.append(rng.integers(0, c, n))
+        else:
+            parent = cols[int(rng.integers(0, i))]
+            noise = rng.integers(0, c, n)
+            cols.append(np.where(rng.random(n) < 0.7, parent % c, noise))
+    data = np.stack(cols, axis=1)
+    bn = BayesNet().fit(data, names=names, cards=cards,
+                        template_edges=[(names[i], names[i + 1])
+                                        for i in range(n_vars - 1)])
+
+    # brute force: enumerate the full joint from the CPDs
+    import itertools as it
+    full = np.zeros(cards)
+    for assign in it.product(*[range(c) for c in cards]):
+        p = 1.0
+        for v in names:
+            f = bn.cpds[v]
+            idx = tuple(assign[names.index(x)] for x in f.vars)
+            p *= float(f.values[idx])
+        full[assign] = p
+    full /= full.sum()
+
+    # compare marginals with and without evidence
+    q = names[-1]
+    marg_ve = bn.marginal(q)
+    axes = tuple(i for i in range(n_vars) if names[i] != q)
+    marg_bf = full.sum(axis=axes)
+    np.testing.assert_allclose(marg_ve, marg_bf, atol=1e-9)
+
+    ev_var, ev_val = names[0], 0
+    post_ve = bn.marginal(q, {ev_var: ev_val})
+    sliced = np.take(full, ev_val, axis=0)
+    axes2 = tuple(i for i in range(n_vars - 1) if names[i + 1] != q)
+    post_bf = sliced.sum(axis=axes2)
+    post_bf = post_bf / post_bf.sum()
+    np.testing.assert_allclose(post_ve, post_bf, atol=1e-9)

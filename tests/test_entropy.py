@@ -1,0 +1,65 @@
+"""Property tests for the entropy/MI uncertainty quantification (§IV-C)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bayesnet import BayesNet
+from repro.core.entropy import (
+    binary_entropy,
+    conditional_mutual_information,
+    dynamic_stage_entropy,
+    entropy,
+)
+
+
+@given(st.lists(st.floats(1e-6, 1.0), min_size=1, max_size=16))
+@settings(max_examples=100, deadline=None)
+def test_entropy_nonneg_and_bounded(ps):
+    p = np.array(ps) / sum(ps)
+    h = entropy(p)
+    assert 0.0 <= h <= np.log2(len(p)) + 1e-9
+
+
+def test_entropy_uniform_max():
+    assert abs(entropy(np.ones(8) / 8) - 3.0) < 1e-9
+    assert entropy(np.array([1.0, 0.0, 0.0])) == 0.0
+
+
+@given(st.floats(0.0, 1.0))
+@settings(max_examples=50, deadline=None)
+def test_binary_entropy_symmetry(p):
+    assert abs(binary_entropy(p) - binary_entropy(1 - p)) < 1e-9
+
+
+def test_dynamic_stage_entropy_eq4():
+    # deterministic plan (all probs 0/1) has zero structural entropy
+    assert dynamic_stage_entropy({"x": 1.0, "y": 0.0}, {("x", "y"): 0.0}) == 0.0
+    # maximal uncertainty: every candidate/edge is a fair coin
+    h = dynamic_stage_entropy({"x": 0.5, "y": 0.5}, {("x", "y"): 0.5})
+    assert abs(h - 3.0) < 1e-9
+
+
+def _bn(n=3000, corr=0.9, seed=0):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, n)
+    b = np.where(rng.random(n) < corr, a, rng.integers(0, 2, n))
+    c = np.where(rng.random(n) < corr, a, rng.integers(0, 2, n))
+    return BayesNet().fit(
+        np.stack([a, b, c], 1), names=["a", "b", "c"], cards=[2, 2, 2],
+        template_edges=[("a", "b"), ("a", "c")],
+    )
+
+
+def test_mi_nonnegative_and_informative():
+    bn = _bn()
+    mi = conditional_mutual_information(bn, ["b", "c"], "a")
+    assert mi > 0.1
+    # conditioning on a leaves nothing to learn from it
+    mi0 = conditional_mutual_information(bn, ["b"], "a", evidence={"a": 1})
+    assert mi0 == 0.0
+
+
+def test_mi_decreases_with_weaker_correlation():
+    strong = conditional_mutual_information(_bn(corr=0.95), ["b", "c"], "a")
+    weak = conditional_mutual_information(_bn(corr=0.6), ["b", "c"], "a")
+    assert strong > weak

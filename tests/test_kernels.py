@@ -1,0 +1,170 @@
+"""Per-kernel allclose sweeps vs the ref.py oracles (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref as R
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rmsnorm import rmsnorm
+from repro.kernels.ssm_scan import ssm_scan
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 3e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention: shape × dtype × causal sweep
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,K,hd,causal",
+    [
+        (1, 128, 128, 4, 4, 64, True),     # MHA
+        (2, 256, 256, 8, 2, 64, True),     # GQA g=4
+        (1, 384, 384, 6, 6, 64, False),    # bidirectional (encoder)
+        (2, 128, 128, 4, 1, 128, True),    # MQA
+        (1, 512, 512, 2, 2, 128, True),    # long-ish
+        (1, 96, 96, 4, 2, 64, True),       # non-multiple-of-128 seq
+    ],
+)
+def test_flash_attention_matches_ref(B, Sq, Sk, H, K, hd, causal, dtype):
+    q = _rand((B, Sq, H, hd), dtype)
+    k = _rand((B, Sk, K, hd), dtype)
+    v = _rand((B, Sk, K, hd), dtype)
+    out = flash_attention(q, k, v, causal=causal, interpret=True,
+                          block_q=64, block_k=64)
+    ref = R.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+def test_flash_attention_mla_vdim():
+    """MLA: v head dim != qk head dim."""
+    q = _rand((1, 128, 4, 192), jnp.float32)
+    k = _rand((1, 128, 4, 192), jnp.float32)
+    v = _rand((1, 128, 4, 128), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = R.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,S,H,K,hd,block_k",
+    [
+        (2, 512, 8, 2, 64, 128),
+        (4, 256, 4, 4, 128, 256),
+        (1, 1024, 16, 8, 64, 512),
+        (3, 320, 4, 1, 64, 128),   # ragged length vs block
+    ],
+)
+def test_decode_attention_matches_ref(B, S, H, K, hd, block_k, dtype):
+    q = _rand((B, H, hd), dtype)
+    kc = _rand((B, S, K, hd), dtype)
+    vc = _rand((B, S, K, hd), dtype)
+    lens = jnp.asarray(RNG.integers(1, S + 1, size=(B,)), jnp.int32)
+    out = decode_attention(q, kc, vc, lens, interpret=True, block_k=block_k)
+    ref = R.decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@given(lens=st.lists(st.integers(1, 256), min_size=2, max_size=4))
+@settings(max_examples=10, deadline=None)
+def test_decode_attention_length_property(lens):
+    """Entries beyond `lengths` must not affect the output."""
+    B = len(lens)
+    S, H, K, hd = 256, 4, 2, 64
+    q = _rand((B, H, hd), jnp.float32)
+    kc = np.asarray(_rand((B, S, K, hd), jnp.float32))
+    vc = np.asarray(_rand((B, S, K, hd), jnp.float32))
+    kc2, vc2 = kc.copy(), vc.copy()
+    for b, L in enumerate(lens):  # poison the invalid region
+        kc2[b, L:] = 99.0
+        vc2[b, L:] = -99.0
+    lens_a = jnp.asarray(lens, jnp.int32)
+    o1 = decode_attention(jnp.asarray(kc) * 0 + q, jnp.asarray(kc),
+                          jnp.asarray(vc), lens_a, interpret=True, block_k=64) \
+        if False else decode_attention(q, jnp.asarray(kc), jnp.asarray(vc),
+                                       lens_a, interpret=True, block_k=64)
+    o2 = decode_attention(q, jnp.asarray(kc2), jnp.asarray(vc2), lens_a,
+                          interpret=True, block_k=64)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("shape", [(4, 64, 256), (2, 128), (1, 7, 384)])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = _rand(shape, dtype)
+    g = _rand(shape[-1:], dtype)
+    out = rmsnorm(x, g, interpret=True, block_rows=32)
+    ref = R.rmsnorm_ref(x, g)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+# ---------------------------------------------------------------------------
+# ssm scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,T,D,N,chunk,d_block",
+    [(2, 256, 128, 16, 64, 64), (1, 128, 256, 8, 128, 128), (2, 64, 64, 16, 32, 64)],
+)
+def test_ssm_scan_matches_ref(B, T, D, N, chunk, d_block):
+    x = _rand((B, T, D), jnp.float32) * 0.5
+    dt = jnp.abs(_rand((B, T, D), jnp.float32)) * 0.1
+    A = -(jnp.abs(_rand((D, N), jnp.float32)) + 0.1)
+    Bm = _rand((B, T, N), jnp.float32) * 0.3
+    Cm = _rand((B, T, N), jnp.float32) * 0.3
+    Dk = _rand((D,), jnp.float32)
+    y, h = ssm_scan(x, dt, A, Bm, Cm, Dk, chunk=chunk, d_block=d_block,
+                    interpret=True)
+    yr, hr = R.ssm_scan_ref(x, dt, A, Bm, Cm, Dk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=2e-4)
+
+
+def test_ssm_scan_carries_state():
+    """Scanning two halves with carried state == scanning the whole."""
+    B, T, D, N = 1, 128, 64, 8
+    x = _rand((B, T, D), jnp.float32) * 0.5
+    dt = jnp.abs(_rand((B, T, D), jnp.float32)) * 0.1
+    A = -(jnp.abs(_rand((D, N), jnp.float32)) + 0.1)
+    Bm = _rand((B, T, N), jnp.float32) * 0.3
+    Cm = _rand((B, T, N), jnp.float32) * 0.3
+    Dk = _rand((D,), jnp.float32)
+    y_full, h_full = R.ssm_scan_ref(x, dt, A, Bm, Cm, Dk)
+    h = None
+    ys = []
+    for lo, hi in ((0, 64), (64, 128)):
+        y, h = ssm_scan(x[:, lo:hi], dt[:, lo:hi], A, Bm[:, lo:hi],
+                        Cm[:, lo:hi], Dk, h0=h, chunk=32, d_block=64,
+                        interpret=True)
+        ys.append(y)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate(ys, axis=1)), np.asarray(y_full), atol=2e-4
+    )
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_full), atol=2e-4)

@@ -1,0 +1,79 @@
+"""End-to-end behaviour tests for the full LLMSched system."""
+
+import numpy as np
+import pytest
+
+from repro.core import LLMSched, ProfileStore, make_baselines
+from repro.sim import generate_traces, generate_workload, get_generators, simulate
+from repro.sim.simulator import configure_cluster
+
+
+@pytest.fixture(scope="module")
+def setup():
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 300, seed=7))
+    return apps, store
+
+
+def test_full_pipeline_all_schedulers(setup):
+    """Every scheduler (ours + 6 baselines) completes a mixed workload."""
+    _, store = setup
+    scheds = dict(make_baselines(store))
+    scheds["llmsched"] = LLMSched(store, epsilon=0.2, seed=0)
+    for name, s in scheds.items():
+        r = simulate(s, mix="mixed", n_jobs=15, seed=3, n_regular=4,
+                     n_llm=2, max_batch=8)
+        assert len(r.jcts) == 15, name
+
+
+def test_ablation_components_exist(setup):
+    """The two paper ablations are expressible (Fig. 10)."""
+    _, store = setup
+    full = LLMSched(store, epsilon=0.2, seed=0)
+    wo_bn = LLMSched(store, epsilon=0.2, use_bn=False, seed=0)
+    wo_unc = LLMSched(store, epsilon=0.0, seed=0)
+    for s in (full, wo_bn, wo_unc):
+        r = simulate(s, mix="planning", n_jobs=12, seed=3, n_regular=6,
+                     n_llm=1, max_batch=8)
+        assert len(r.jcts) == 12
+
+
+def test_dynamic_stage_lifecycle(setup):
+    """Planning jobs: dynamic stages expand only after the plan finishes,
+    and expanded stages complete."""
+    _, store = setup
+    wl = generate_workload("planning", 8, seed=5)
+    ta = [gj for gj in wl if gj.job.app.name == "task_auto"]
+    if not ta:
+        pytest.skip("no task_auto in sample")
+    job = ta[0].job
+    dyn = job.stages["auto_tools"]
+    assert not dyn.revealed
+    r = simulate(LLMSched(store, seed=0), mix="planning", n_jobs=8, seed=5,
+                 n_regular=6, n_llm=1, max_batch=8)
+    assert len(r.jcts) == 8
+
+
+def test_fault_tolerance_executor_failures():
+    """Executor failures requeue running tasks; every job still finishes
+    (checkpoint/restart at the scheduling layer)."""
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 150, seed=7))
+    r = simulate(LLMSched(store, seed=0), mix="mixed", n_jobs=20, seed=3,
+                 n_regular=4, n_llm=2, max_batch=8,
+                 failure_rate=0.03, straggler_factor=0.0)
+    assert len(r.jcts) == 20
+    assert r.preemptions > 0
+
+
+def test_straggler_speculative_reissue():
+    """Straggling regular tasks get a speculative duplicate; first wins."""
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("planning", 150, seed=7))
+    r = simulate(LLMSched(store, seed=1), mix="planning", n_jobs=25, seed=5,
+                 n_regular=8, n_llm=1, max_batch=8, straggler_factor=3.0)
+    assert len(r.jcts) == 25
+    assert r.reissues > 0

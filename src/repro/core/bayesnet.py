@@ -217,6 +217,7 @@ class BayesNet:
         self.cards: Dict[str, int] = {}
         self.parents: Dict[str, List[str]] = {}
         self.cpds: Dict[str, Factor] = {}  # factor over (node, *parents)
+        self._desc_cache: Dict[str, Set[str]] = {}  # node -> descendants
 
     # -- structure + parameters -------------------------------------------
     def fit(
@@ -268,12 +269,14 @@ class BayesNet:
                 counts[tuple(int(row[c]) for c in cols)] += 1.0
             counts /= counts.sum(axis=0, keepdims=True)
             self.cpds[v] = Factor(tuple([v] + ps), counts)
+        self._desc_cache = {}
         return self
 
     # -- correlation (Eq. 1): directed path u ->* v in the BN ---------------
-    def correlated(self, u: str, v: str) -> bool:
-        if u == v:
-            return False
+    def _descendants(self, u: str) -> Set[str]:
+        hit = self._desc_cache.get(u)
+        if hit is not None:
+            return hit
         children: Dict[str, List[str]] = {x: [] for x in self.nodes}
         for c, ps in self.parents.items():
             for p in ps:
@@ -283,12 +286,16 @@ class BayesNet:
         while frontier:
             x = frontier.pop()
             for c in children.get(x, ()):
-                if c == v:
-                    return True
                 if c not in seen:
                     seen.add(c)
                     frontier.append(c)
-        return False
+        self._desc_cache[u] = seen
+        return seen
+
+    def correlated(self, u: str, v: str) -> bool:
+        if u == v:
+            return False
+        return v in self._descendants(u)
 
     def correlated_set(self, u: str) -> List[str]:
         return [v for v in self.nodes if self.correlated(u, v)]
@@ -308,19 +315,49 @@ class BayesNet:
             out.append(f)
         return out
 
-    def joint(self, query: Sequence[str], evidence: Optional[Evidence] = None) -> Factor:
+    def reduced_factors(self, evidence: Optional[Evidence] = None) -> List[Factor]:
+        """Evidence-reduced CPD factors — the shared prefix of every query
+        against the same evidence set.  Compute once, then pass to
+        :meth:`joint`/:meth:`marginal`/:meth:`marginals` via ``factors=``
+        to amortize one BN "forward pass" over many queries."""
+        return self._reduced_factors(dict(evidence or {}))
+
+    def joint(
+        self,
+        query: Sequence[str],
+        evidence: Optional[Evidence] = None,
+        factors: Optional[List[Factor]] = None,
+    ) -> Factor:
         """P(query | evidence), normalized, vars ordered as ``query``."""
         evidence = dict(evidence or {})
         query = [q for q in query if q not in evidence]
-        f = eliminate(self._reduced_factors(evidence), keep=query)
+        if factors is None:
+            factors = self._reduced_factors(evidence)
+        f = eliminate(factors, keep=query)
         return f.normalize().reorder(query)
 
-    def marginal(self, var: str, evidence: Optional[Evidence] = None) -> np.ndarray:
+    def marginal(
+        self,
+        var: str,
+        evidence: Optional[Evidence] = None,
+        factors: Optional[List[Factor]] = None,
+    ) -> np.ndarray:
         if evidence and var in evidence:
             p = np.zeros(self.cards[var])
             p[int(evidence[var])] = 1.0
             return p
-        return self.joint([var], evidence).values
+        return self.joint([var], evidence, factors=factors).values
+
+    def marginals(
+        self, names: Sequence[str], evidence: Optional[Evidence] = None
+    ) -> Dict[str, np.ndarray]:
+        """Posterior marginals of ``names`` sharing one evidence-reduction
+        pass (the dominant per-query cost for these small networks)."""
+        evidence = dict(evidence or {})
+        factors = self._reduced_factors(evidence)
+        return {
+            n: self.marginal(n, evidence, factors=factors) for n in names
+        }
 
 
 def _empirical_mi(x: np.ndarray, y: np.ndarray, cx: int, cy: int) -> float:

@@ -215,6 +215,17 @@ class Job:
     # trigger stage name -> stage names whose existence it reveals (chains)
     reveal_rules: Dict[str, List[str]] = field(default_factory=dict)
     finish_time: float = -1.0
+    # Monotonic counter bumped by the runtime on every event that changes
+    # this job's *observable* state (task dispatch/completion, stage
+    # reveal, dynamic expansion, failure requeue).  Incremental schedulers
+    # key their cross-round caches on it: while the version is unchanged,
+    # BN evidence, remaining-duration bases, duration bounds, and
+    # uncertainty-reduction scores are all provably stale-free.
+    evidence_version: int = 0
+
+    def bump_evidence(self) -> None:
+        """Record an observable-state change (invalidates cached estimates)."""
+        self.evidence_version += 1
 
     # -- dependency/readiness ---------------------------------------------
     def parents_of(self, name: str) -> List[str]:

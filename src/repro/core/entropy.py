@@ -45,6 +45,8 @@ def conditional_mutual_information(
     x: str,
     evidence: Optional[Evidence] = None,
     max_joint: int = 4,
+    factors: Optional[Sequence[Factor]] = None,
+    marginal_cache: Optional[Dict[str, np.ndarray]] = None,
 ) -> float:
     """I(Y_1..Y_M ; X | E)  (Eq. 5 with conditioning set E).
 
@@ -52,17 +54,33 @@ def conditional_mutual_information(
     for larger M we keep the ``max_joint`` targets whose marginal posterior
     entropy is largest and compute the exact joint MI over those — a lower
     bound that preserves the ranking the scheduler needs.
+
+    ``factors`` optionally carries precomputed evidence-reduced CPD factors
+    (:meth:`BayesNet.reduced_factors`), letting callers amortize the
+    evidence-reduction pass over many queries against the same evidence.
+    ``marginal_cache`` (same contract: one evidence set) shares target
+    posteriors across repeated calls.
     """
     evidence = dict(evidence or {})
     targets = [t for t in targets if t != x and t not in evidence]
     if not targets:
         return 0.0
+    factors = list(factors) if factors is not None else None
     if len(targets) > max_joint:
-        ents = {t: entropy(bn.marginal(t, evidence)) for t in targets}
+
+        def marg(t: str) -> np.ndarray:
+            if marginal_cache is not None and t in marginal_cache:
+                return marginal_cache[t]
+            m = bn.marginal(t, evidence, factors=factors)
+            if marginal_cache is not None:
+                marginal_cache[t] = m
+            return m
+
+        ents = {t: entropy(marg(t)) for t in targets}
         targets = sorted(targets, key=lambda t: -ents[t])[:max_joint]
 
     # joint over (targets, x) given evidence
-    jf = bn.joint(list(targets) + [x], evidence)
+    jf = bn.joint(list(targets) + [x], evidence, factors=factors)
     if x not in jf.vars:  # x fixed by evidence — no information to gain
         return 0.0
     p_joint = jf.reorder(list(targets) + [x]).values
@@ -106,3 +124,49 @@ def uncertainty_reduction(
         post = bn.marginal(y, evidence)
         range_sum += discretizers[y].range_span(post)
     return float(mi * range_sum + dynamic_bonus)
+
+
+def uncertainty_reductions(
+    bn: BayesNet,
+    discretizers: Mapping[str, Discretizer],
+    xs: Sequence[str],
+    unscheduled: Iterable[str],
+    evidence: Optional[Evidence] = None,
+    dynamic_bonuses: Optional[Sequence[float]] = None,
+) -> list:
+    """Batched Eq. 6: R(X) for every X in ``xs`` against one evidence set.
+
+    Produces exactly the same numbers as calling
+    :func:`uncertainty_reduction` per stage, but performs the BN
+    evidence-reduction pass and the target posteriors once for the whole
+    batch — one "forward pass" scores all ready stages of a job.
+    """
+    evidence = dict(evidence or {})
+    unscheduled = list(unscheduled)
+    bonuses = (
+        list(dynamic_bonuses) if dynamic_bonuses is not None else [0.0] * len(xs)
+    )
+    factors: Optional[list] = None          # built lazily on first MI query
+    post_cache: Dict[str, np.ndarray] = {}  # shared target posteriors
+    out = []
+    for x, bonus in zip(xs, bonuses):
+        unsched = [u for u in unscheduled if u != x and u not in evidence]
+        correlated = [y for y in unsched if bn.correlated(x, y)]
+        if not correlated:
+            out.append(float(bonus))
+            continue
+        if factors is None:
+            factors = bn.reduced_factors(evidence)
+        mi = conditional_mutual_information(
+            bn, correlated, x, evidence, factors=factors,
+            marginal_cache=post_cache,
+        )
+        range_sum = 0.0
+        for y in correlated:
+            post = post_cache.get(y)
+            if post is None:
+                post = bn.marginal(y, evidence, factors=factors)
+                post_cache[y] = post
+            range_sum += discretizers[y].range_span(post)
+        out.append(float(mi * range_sum + bonus))
+    return out

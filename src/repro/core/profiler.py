@@ -21,7 +21,11 @@ import numpy as np
 
 from .bayesnet import BayesNet, Discretizer, fit_discretizer
 from .dag import ApplicationTemplate, Job, Stage, StageType
-from .entropy import dynamic_stage_entropy, uncertainty_reduction
+from .entropy import (
+    dynamic_stage_entropy,
+    uncertainty_reduction,
+    uncertainty_reductions,
+)
 
 
 @dataclass
@@ -55,6 +59,19 @@ class AppProfile:
         # queries make scheduling effectively O(1) per stage.
         self._marg_cache: Dict[Tuple, np.ndarray] = {}
         self._ur_cache: Dict[Tuple, float] = {}
+        # ---- incremental (cross-round) per-job caches -------------------
+        # Keyed by job_id, each slot stores (evidence_version, payload);
+        # a stale version is simply overwritten, so memory stays O(active
+        # jobs).  Entries are dropped via forget_job() on job completion.
+        self._job_ev: Dict[int, Tuple[int, Dict[str, int]]] = {}
+        # (job_id, use_bn) -> (version, done_names, base_estimates, has_running)
+        self._job_base: Dict[Tuple[int, bool], Tuple] = {}
+        # (job_id, use_bn) -> (version, calib_sig, mode, value)
+        self._job_rd: Dict[Tuple[int, bool], Tuple] = {}
+        # (job_id, use_bn) -> (version, (lo, hi))
+        self._job_bounds: Dict[Tuple[int, bool], Tuple] = {}
+        # job_id -> (version, {stage_name: R})
+        self._job_ur: Dict[int, Tuple[int, Dict[str, float]]] = {}
 
     # ------------------------------------------------------------------ fit
     def fit(self, traces: Sequence[JobTrace], max_bins: int = 6,
@@ -114,8 +131,17 @@ class AppProfile:
         return self
 
     # ------------------------------------------------------- evidence/query
-    def evidence_for(self, job: Job) -> Dict[str, int]:
-        """BN evidence from this job's observable state."""
+    def evidence_for(self, job: Job, version: Optional[int] = None) -> Dict[str, int]:
+        """BN evidence from this job's observable state.
+
+        ``version`` (the job's ``evidence_version``) enables the
+        cross-round cache: evidence is rebuilt only when the runtime has
+        reported an observable-state change for this job.
+        """
+        if version is not None:
+            hit = self._job_ev.get(job.job_id)
+            if hit is not None and hit[0] == version:
+                return hit[1]
         ev: Dict[str, int] = {}
         for name, dur in job.completed_durations().items():
             if name in self.discretizers:
@@ -124,7 +150,18 @@ class AppProfile:
             d = self.discretizers.get(name)
             if d is not None and d.has_zero_bin and name not in ev:
                 ev[name] = 0
+        if version is not None:
+            self._job_ev[job.job_id] = (version, ev)
         return ev
+
+    def forget_job(self, job_id: int) -> None:
+        """Drop all per-job cache slots (call when a job leaves the system)."""
+        self._job_ev.pop(job_id, None)
+        self._job_ur.pop(job_id, None)
+        for use_bn in (False, True):
+            self._job_base.pop((job_id, use_bn), None)
+            self._job_rd.pop((job_id, use_bn), None)
+            self._job_bounds.pop((job_id, use_bn), None)
 
     @staticmethod
     def _ev_key(evidence: Mapping[str, int]) -> Tuple:
@@ -137,6 +174,27 @@ class AppProfile:
             out = self.bn.marginal(name, evidence)
             self._marg_cache[key] = out
         return out
+
+    def marginals_for(
+        self, names: Sequence[str], evidence: Mapping[str, int]
+    ) -> None:
+        """Prefill the posterior cache for ``names`` under one evidence set,
+        sharing a single evidence-reduction pass over the BN factors (one
+        forward pass instead of one per stage)."""
+        ev_key = self._ev_key(evidence)
+        missing = [n for n in names if (n, ev_key) not in self._marg_cache]
+        if not missing:
+            return
+        factors = None
+        for n in missing:
+            if evidence and n in evidence:
+                self._marg_cache[(n, ev_key)] = self.bn.marginal(n, evidence)
+                continue
+            if factors is None:
+                factors = self.bn.reduced_factors(evidence)
+            self._marg_cache[(n, ev_key)] = self.bn.marginal(
+                n, evidence, factors=factors
+            )
 
     def stage_expectation(self, name: str, evidence: Mapping[str, int]) -> float:
         """E[duration of stage | evidence] via BN posterior."""
@@ -156,29 +214,44 @@ class AppProfile:
         return (float(d.repr_value[idx].min()), float(d.repr_value[idx].max()))
 
     # ------------------------------------------------- remaining-time query
-    def est_remaining(
-        self,
-        job: Job,
-        now: float,
-        calibrate: Optional[Callable[[Stage, float], float]] = None,
-        mode: str = "critical_path",
-        use_bn: bool = True,
-    ) -> float:
-        """Estimated remaining duration of ``job`` (line 1 of Algorithm 1).
+    def _base_estimates(
+        self, job: Job, use_bn: bool, version: Optional[int] = None
+    ) -> Tuple[set, Dict[str, float], bool]:
+        """(done_names, base, has_running) for ``job``'s stages.
 
-        ``calibrate`` maps (stage, base_estimate) -> batching-calibrated
-        estimate (Eq. 2); identity if None.  ``use_bn=False`` gives the
-        "LLMSched w/o BN" ablation (historical means, no posterior).
+        ``base[name]`` is the stage's duration estimate *before* batching
+        calibration and elapsed-time subtraction — a pure function of the
+        job's BN evidence and observable structure, so it is cacheable per
+        (job, evidence_version).  ``has_running`` records whether any
+        unfinished stage is executing (making the final remaining-duration
+        value time-dependent and thus uncacheable as a scalar).
         """
-        ev = self.evidence_for(job) if use_bn else {}
-        est: Dict[str, float] = {}
+        key = (job.job_id, bool(use_bn))
+        if version is not None:
+            hit = self._job_base.get(key)
+            if hit is not None and hit[0] == version:
+                return hit[1], hit[2], hit[3]
+        ev = self.evidence_for(job, version) if use_bn else {}
+        if self._fitted:
+            # one BN forward pass covers every stage expectation below
+            self.marginals_for(
+                [
+                    n
+                    for n, s in job.stages.items()
+                    if n in self.discretizers and not s.obs_done()
+                ],
+                ev if use_bn else {},
+            )
+        done: set = set()
+        base: Dict[str, float] = {}
+        has_running = False
         for name, stage in job.stages.items():
             # NOTE: ``stage.will_execute`` is ground truth — only observable
             # once the stage is *revealed* (no oracle leak).  Unrevealed
             # stages keep their BN expectation, whose bin-0 mass already
             # prices in the probability they never run.
             if stage.obs_done():
-                est[name] = 0.0
+                done.add(name)
                 continue
             if name in self.discretizers and self._fitted:
                 if use_bn:
@@ -196,6 +269,54 @@ class AppProfile:
                 e = self.candidate_mean_dur.get(dyn, {}).get(cand, 1.0)
             else:
                 e = 1.0
+            if stage.running():
+                has_running = True
+            base[name] = e
+        if version is not None:
+            self._job_base[key] = (version, done, base, has_running)
+        return done, base, has_running
+
+    def est_remaining(
+        self,
+        job: Job,
+        now: float,
+        calibrate: Optional[Callable[[Stage, float], float]] = None,
+        mode: str = "critical_path",
+        use_bn: bool = True,
+        version: Optional[int] = None,
+        calib_key: Optional[Tuple] = None,
+    ) -> float:
+        """Estimated remaining duration of ``job`` (line 1 of Algorithm 1).
+
+        ``calibrate`` maps (stage, base_estimate) -> batching-calibrated
+        estimate (Eq. 2); identity if None.  ``use_bn=False`` gives the
+        "LLMSched w/o BN" ablation (historical means, no posterior).
+
+        ``version`` is the job's ``evidence_version``; when provided, the
+        per-stage BN work is cached across scheduling rounds and only the
+        cheap calibrate/elapsed/critical-path pass re-runs.  ``calib_key``
+        is a hashable token identifying the calibration context (e.g.
+        (profile epoch, target batch)); when the job additionally has no
+        running stage the final scalar is cached outright.
+        """
+        slot = (job.job_id, bool(use_bn))
+        sig = ("ident",) if calibrate is None else calib_key
+        if version is not None and sig is not None:
+            hit = self._job_rd.get(slot)
+            if (
+                hit is not None
+                and hit[0] == version
+                and hit[1] == sig
+                and hit[2] == mode
+            ):
+                return hit[3]
+        done, base, has_running = self._base_estimates(job, use_bn, version)
+        est: Dict[str, float] = {}
+        for name, stage in job.stages.items():
+            if name in done:
+                est[name] = 0.0
+                continue
+            e = base[name]
             if calibrate is not None:
                 e = calibrate(stage, e)
             if stage.running():
@@ -207,24 +328,44 @@ class AppProfile:
             est[name] = e
 
         if mode == "sum":
-            return float(sum(est.values()))
-        # critical path over unfinished stages (finished contribute 0)
-        order = self.app.topo_order()
-        dist: Dict[str, float] = {}
-        for n in order:
-            if n not in job.stages:
-                continue
-            pmax = max((dist.get(p, 0.0) for p in self.app.parents(n)), default=0.0)
-            dist[n] = pmax + est.get(n, 0.0)
-        # realized dynamic inner stages live outside the template order
-        extra = sum(
-            est.get(n, 0.0) for n in est if n not in dist
-        )
-        return float(max(dist.values(), default=0.0) + extra)
+            out = float(sum(est.values()))
+        else:
+            # critical path over unfinished stages (finished contribute 0)
+            order = self.app.topo_order()
+            dist: Dict[str, float] = {}
+            for n in order:
+                if n not in job.stages:
+                    continue
+                pmax = max(
+                    (dist.get(p, 0.0) for p in self.app.parents(n)), default=0.0
+                )
+                dist[n] = pmax + est.get(n, 0.0)
+            # realized dynamic inner stages live outside the template order
+            extra = sum(est.get(n, 0.0) for n in est if n not in dist)
+            out = float(max(dist.values(), default=0.0) + extra)
+        if version is not None and sig is not None and not has_running:
+            self._job_rd[slot] = (version, sig, mode, out)
+        return out
 
-    def job_bounds(self, job: Job, use_bn: bool = True) -> Tuple[float, float]:
+    def job_bounds(
+        self, job: Job, use_bn: bool = True, version: Optional[int] = None
+    ) -> Tuple[float, float]:
         """[lo, hi] of the job's remaining-duration distribution (line 5)."""
-        ev = self.evidence_for(job) if use_bn else {}
+        slot = (job.job_id, bool(use_bn))
+        if version is not None:
+            hit = self._job_bounds.get(slot)
+            if hit is not None and hit[0] == version:
+                return hit[1]
+        ev = self.evidence_for(job, version) if use_bn else {}
+        if self._fitted:
+            self.marginals_for(
+                [
+                    n
+                    for n, s in job.stages.items()
+                    if n in self.discretizers and not s.obs_done()
+                ],
+                ev,
+            )
         lo = hi = 0.0
         for name, stage in job.stages.items():
             if stage.obs_done():
@@ -232,25 +373,14 @@ class AppProfile:
             l, h = self.stage_bounds(name, ev) if self._fitted else (0.0, 1.0)
             lo += l
             hi += h
-        return (lo, hi)
+        out = (lo, hi)
+        if version is not None:
+            self._job_bounds[slot] = (version, out)
+        return out
 
     # ------------------------------------------------- uncertainty reduction
-    def stage_uncertainty_reduction(self, job: Job, stage_name: str) -> float:
-        """R(stage) for Algorithm 1 line 8 (Eq. 6 + dynamic bonus)."""
-        if not self._fitted:
-            return 0.0
-        ev = self.evidence_for(job)
-        unscheduled = [
-            name
-            for name, s in job.stages.items()
-            if not s.obs_done()
-            and not s.running()
-            and s.dispatched_tasks == 0
-        ]
-        key = (stage_name, tuple(sorted(unscheduled)), self._ev_key(ev))
-        hit = self._ur_cache.get(key)
-        if hit is not None:
-            return hit
+    def _dynamic_bonus(self, job: Job, stage_name: str, ev: Mapping[str, int]) -> float:
+        """Eq. 4 bonus for dynamic stages resolved by finishing this stage."""
         bonus = 0.0
         st = job.stages.get(stage_name)
         if st is not None and st.stype is StageType.LLM:
@@ -267,19 +397,84 @@ class AppProfile:
                     post = self.marginal(child, ev) if d else None
                     rng = d.range_span(post) if d is not None and post is not None else 1.0
                     bonus += h * max(rng, 1e-6)
-        if stage_name not in self.bn.nodes:
-            self._ur_cache[key] = float(bonus)
-            return float(bonus)
-        out = uncertainty_reduction(
-            self.bn,
-            self.discretizers,
-            stage_name,
-            unscheduled,
-            ev,
-            dynamic_bonus=bonus,
-        )
-        self._ur_cache[key] = out
-        return out
+        return bonus
+
+    def stage_uncertainty_reduction(
+        self, job: Job, stage_name: str, version: Optional[int] = None
+    ) -> float:
+        """R(stage) for Algorithm 1 line 8 (Eq. 6 + dynamic bonus)."""
+        return self.stage_uncertainty_reductions(job, [stage_name], version)[0]
+
+    def stage_uncertainty_reductions(
+        self,
+        job: Job,
+        stage_names: Sequence[str],
+        version: Optional[int] = None,
+    ) -> List[float]:
+        """Batched R(stage) for several ready stages of one job.
+
+        All stages share one evidence set, one unscheduled-set scan, and
+        one BN evidence-reduction pass (via
+        :func:`repro.core.entropy.uncertainty_reductions`).  With
+        ``version`` set, scores are additionally cached per
+        (job, evidence_version) across scheduling rounds.
+        """
+        if not self._fitted:
+            return [0.0] * len(stage_names)
+        vcache: Optional[Dict[str, float]] = None
+        if version is not None:
+            slot = self._job_ur.get(job.job_id)
+            if slot is not None and slot[0] == version:
+                vcache = slot[1]
+            else:
+                vcache = {}
+                self._job_ur[job.job_id] = (version, vcache)
+            missing = [n for n in stage_names if n not in vcache]
+            if not missing:
+                return [vcache[n] for n in stage_names]
+        else:
+            missing = list(dict.fromkeys(stage_names))
+
+        ev = self.evidence_for(job, version)
+        unscheduled = [
+            name
+            for name, s in job.stages.items()
+            if not s.obs_done()
+            and not s.running()
+            and s.dispatched_tasks == 0
+        ]
+        unsched_t = tuple(sorted(unscheduled))
+        ev_key = self._ev_key(ev)
+        results: Dict[str, float] = {}
+        need_mi: List[Tuple[str, float]] = []
+        for name in missing:
+            key = (name, unsched_t, ev_key)
+            hit = self._ur_cache.get(key)
+            if hit is not None:
+                results[name] = hit
+                continue
+            bonus = self._dynamic_bonus(job, name, ev)
+            if name not in self.bn.nodes:
+                results[name] = float(bonus)
+                self._ur_cache[key] = results[name]
+                continue
+            need_mi.append((name, bonus))
+        if need_mi:
+            vals = uncertainty_reductions(
+                self.bn,
+                self.discretizers,
+                [n for n, _ in need_mi],
+                unscheduled,
+                ev,
+                dynamic_bonuses=[b for _, b in need_mi],
+            )
+            for (name, _), val in zip(need_mi, vals):
+                results[name] = val
+                self._ur_cache[(name, unsched_t, ev_key)] = val
+        if vcache is not None:
+            vcache.update(results)
+            return [vcache[n] for n in stage_names]
+        return [results[n] for n in stage_names]
 
 
 class ProfileStore:
@@ -305,3 +500,8 @@ class ProfileStore:
 
     def get(self, name: str) -> Optional[AppProfile]:
         return self.profiles.get(name)
+
+    def forget_job(self, job_id: int) -> None:
+        """Evict a finished job's slots from every profile's caches."""
+        for prof in self.profiles.values():
+            prof.forget_job(job_id)

@@ -72,6 +72,12 @@ class LLMSched(Scheduler):
 
     ``use_bn=False``           → "LLMSched w/o BN" ablation (historical means).
     ``epsilon=0``              → "LLMSched w/o uncertainty" ablation (pure SRTF).
+    ``incremental=True``       → cross-round caching: per-job BN evidence,
+    remaining-duration bases, duration bounds, and uncertainty scores are
+    memoized against ``Job.evidence_version`` and recomputed only for jobs
+    the runtime reported events for (stage completion, dispatch, reveal).
+    Emits decisions identical to ``incremental=False``; the flag only
+    moves work out of the per-round hot path.
     """
 
     name = "llmsched"
@@ -83,17 +89,42 @@ class LLMSched(Scheduler):
         sampling_ratio: float = 0.3,
         use_bn: bool = True,
         seed: int = 0,
+        incremental: bool = True,
     ) -> None:
         self.profiles = profiles
         self.epsilon = float(epsilon)
         self.sampling_ratio = float(sampling_ratio)
         self.use_bn = use_bn
+        self.incremental = bool(incremental)
         self.rng = np.random.default_rng(seed)
         # caches invalidated per-call; uncertainty scores are reused across
         # ε draws within one invocation.
         self._ur_cache: Dict[Tuple[int, str], float] = {}
+        # calibration-context tracking: the latency profile object only
+        # changes identity when new measurements arrive, so (epoch, b_t)
+        # keys the batching-calibrated remaining-duration cache.
+        self._last_profile = None
+        self._calib_epoch = 0
+        # cross-round ready-stage cache (readiness is pure within a
+        # job's evidence version: it only changes on dispatch/completion/
+        # reveal events, all of which bump the version)
+        self._ready_cache: Dict[int, Tuple[int, List[Stage]]] = {}
 
     # -- helpers -------------------------------------------------------------
+    def _version(self, job: Job) -> Optional[int]:
+        return job.evidence_version if self.incremental else None
+
+    def _ready_stages(self, job: Job) -> List[Stage]:
+        if not self.incremental:
+            return job.ready_stages()
+        v = job.evidence_version
+        hit = self._ready_cache.get(job.job_id)
+        if hit is not None and hit[0] == v:
+            return hit[1]
+        rs = job.ready_stages()
+        self._ready_cache[job.job_id] = (v, rs)
+        return rs
+
     def _calibrator(self, view: ClusterView) -> Callable[[Stage, float], float]:
         prof = view.latency_profile
         if prof is None:
@@ -109,22 +140,46 @@ class LLMSched(Scheduler):
 
         return cal
 
+    def _calib_sig(self, view: ClusterView) -> Tuple:
+        """Hashable token capturing everything the calibrator depends on."""
+        prof = view.latency_profile
+        if prof is None:
+            return ("none",)
+        if prof is not self._last_profile:
+            self._last_profile = prof
+            self._calib_epoch += 1
+        return (self._calib_epoch, view.target_batch())
+
     def est_rd(self, job: Job, view: ClusterView) -> float:
         p = self.profiles.get(job.app.name)
         if p is None:
             return float("inf")
         return p.est_remaining(
-            job, view.now, calibrate=self._calibrator(view), use_bn=self.use_bn
+            job,
+            view.now,
+            calibrate=self._calibrator(view),
+            use_bn=self.use_bn,
+            version=self._version(job),
+            calib_key=self._calib_sig(view),
         )
 
     def _uncert(self, job: Job, stage: Stage) -> float:
-        key = (job.job_id, stage.name)
-        if key not in self._ur_cache:
+        return self._uncert_batch(job, [stage])[0]
+
+    def _uncert_batch(self, job: Job, stages: Sequence[Stage]) -> List[float]:
+        """R(stage) for several ready stages of one job, with one BN pass."""
+        miss = [s for s in stages if (job.job_id, s.name) not in self._ur_cache]
+        if miss:
             p = self.profiles.get(job.app.name)
-            self._ur_cache[key] = (
-                p.stage_uncertainty_reduction(job, stage.name) if p else 0.0
-            )
-        return self._ur_cache[key]
+            if p is None:
+                vals = [0.0] * len(miss)
+            else:
+                vals = p.stage_uncertainty_reductions(
+                    job, [s.name for s in miss], version=self._version(job)
+                )
+            for s, v in zip(miss, vals):
+                self._ur_cache[(job.job_id, s.name)] = v
+        return [self._ur_cache[(job.job_id, s.name)] for s in stages]
 
     @staticmethod
     def non_overlapping_sets(
@@ -138,16 +193,30 @@ class LLMSched(Scheduler):
         """
         if not bounds:
             return []
-        bounds = sorted(bounds, key=lambda t: (t[0], t[1]))
-        groups: List[List[Job]] = [[bounds[0][2]]]
-        cur_hi = bounds[0][1]
-        for lo, hi, job in bounds[1:]:
-            if lo <= cur_hi:  # overlaps current group
-                groups[-1].append(job)
-                cur_hi = max(cur_hi, hi)
-            else:
-                groups.append([job])
-                cur_hi = hi
+        los = np.asarray([b[0] for b in bounds], dtype=np.float64)
+        his = np.asarray([b[1] for b in bounds], dtype=np.float64)
+        return LLMSched._group_by_overlap(los, his, [b[2] for b in bounds])
+
+    @staticmethod
+    def _group_by_overlap(
+        los: np.ndarray, his: np.ndarray, jobs: List[Job]
+    ) -> List[List[Job]]:
+        """Vectorized interval grouping: sort by (lo, hi), then break a
+        group wherever an interval's lo exceeds the running max of hi."""
+        n = len(jobs)
+        if n == 0:
+            return []
+        order = np.lexsort((his, los))  # stable; primary lo, secondary hi
+        slo = los[order]
+        cummax = np.maximum.accumulate(his[order])
+        starts = np.empty(n, dtype=bool)
+        starts[0] = True
+        if n > 1:
+            starts[1:] = slo[1:] > cummax[:-1]
+        gid = np.cumsum(starts) - 1
+        groups: List[List[Job]] = [[] for _ in range(int(gid[-1]) + 1)]
+        for k in range(n):
+            groups[int(gid[k])].append(jobs[int(order[k])])
         return groups
 
     # -- Algorithm 1 -----------------------------------------------------------
@@ -157,27 +226,41 @@ class LLMSched(Scheduler):
         if not jobs:
             return Decision()
 
+        # ready stages once per job per round (reused for S_t and S_u;
+        # cached across rounds for jobs without new events)
+        ready: Dict[int, List[Stage]] = {
+            j.job_id: self._ready_stages(j) for j in jobs
+        }
+
         # lines 1-4: S_t — ready stages in SRTF order of their job
         j_t = sorted(jobs, key=lambda j: (self.est_rd(j, view), j.arrival_time))
         s_t: List[Stage] = []
         for job in j_t:
-            s_t.extend(job.ready_stages())
+            s_t.extend(ready[job.job_id])
 
         # lines 5-10: S_u — stages by uncertainty reduction within
-        # non-overlapping job groups
-        bounds = []
-        for job in jobs:
+        # non-overlapping job groups (bounds gathered into numpy arrays)
+        n = len(jobs)
+        los = np.empty(n, dtype=np.float64)
+        his = np.empty(n, dtype=np.float64)
+        for i, job in enumerate(jobs):
             p = self.profiles.get(job.app.name)
-            lo, hi = p.job_bounds(job, use_bn=self.use_bn) if p else (0.0, math.inf)
-            bounds.append((lo, hi, job))
+            lo, hi = (
+                p.job_bounds(job, use_bn=self.use_bn, version=self._version(job))
+                if p
+                else (0.0, math.inf)
+            )
+            los[i] = lo
+            his[i] = hi
         s_u: List[Stage] = []
-        for group in self.non_overlapping_sets(bounds):
-            stages = []
-            for job in group:
-                stages.extend(job.ready_stages())
+        for group in self._group_by_overlap(los, his, list(jobs)):
             # only genuinely uncertainty-reducing stages are exploration
             # candidates (paper §IV-B: stages correlated with ≥1 other)
-            scored = [(self._uncert_for(s, jobs), s) for s in stages]
+            scored: List[Tuple[float, Stage]] = []
+            for job in group:
+                rs = ready[job.job_id]
+                if rs:
+                    scored.extend(zip(self._uncert_batch(job, rs), rs))
             scored = [(r, s) for r, s in scored if r > 0.0]
             scored.sort(key=lambda t: -t[0])
             s_u.extend(s for _, s in scored)
@@ -185,9 +268,12 @@ class LLMSched(Scheduler):
         # lines 11-20: ε-greedy merge
         return self._merge(s_t, s_u)
 
-    def _uncert_for(self, stage: Stage, jobs: Sequence[Job]) -> float:
-        job = next(j for j in jobs if j.job_id == stage.job_id)
-        return self._uncert(job, stage)
+    def observe_completion(self, job: Job, now: float) -> None:
+        """Evict the finished job's slots from the cross-round caches."""
+        self._ready_cache.pop(job.job_id, None)
+        p = self.profiles.get(job.app.name)
+        if p is not None:
+            p.forget_job(job.job_id)
 
     def _merge(self, s_t: List[Stage], s_u: List[Stage]) -> Decision:
         dec = Decision()

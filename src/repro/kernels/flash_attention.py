@@ -194,7 +194,7 @@ def _compiler_params():
         return pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         )
-    except TypeError:  # older naming
+    except (AttributeError, TypeError):  # older naming
         return pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         )

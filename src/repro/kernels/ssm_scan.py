@@ -135,10 +135,11 @@ def _compiler_params():
     import jax.experimental.pallas.tpu as pltpu
 
     try:
+        # jax >= 0.5 renamed TPUCompilerParams -> CompilerParams
         return pltpu.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         )
-    except TypeError:
+    except (AttributeError, TypeError):
         return pltpu.TPUCompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         )

@@ -86,6 +86,7 @@ def _ep_body_dedup(
     w_down: jax.Array,
     cfg: ModelConfig,
     ep_axis: str,
+    ep_size: int,
     tp_axis: Optional[str],
 ) -> jax.Array:
     """Deduplicated dispatch: one row per (token, destination shard).
@@ -101,7 +102,9 @@ def _ep_body_dedup(
     m = cfg.moe
     T_l, d = x_local.shape
     E = m.n_experts
-    dsize = jax.lax.axis_size(ep_axis)
+    # static axis size (capacity math needs a Python int; jax.lax has no
+    # axis_size and psum(1, axis) traces under shard_map)
+    dsize = ep_size
     E_l = w_gate.shape[0]
     k = m.top_k
 
@@ -214,13 +217,14 @@ def _ep_body(
     w_down: jax.Array,             # (E_l, f_l, d)
     cfg: ModelConfig,
     ep_axis: str,
+    ep_size: int,
     tp_axis: Optional[str],
 ) -> jax.Array:
     m = cfg.moe
     T_l, d = x_local.shape
     E = m.n_experts
     didx = jax.lax.axis_index(ep_axis)
-    dsize = jax.lax.axis_size(ep_axis)
+    dsize = ep_size  # static: capacity/slot shapes below must be Python ints
     E_l = w_gate.shape[0]
     A = T_l * m.top_k                                   # assignments
 
@@ -327,7 +331,10 @@ def moe_ep(
     )
 
     body_fn = _ep_body_dedup if m.dedup_dispatch else _ep_body
-    body = functools.partial(body_fn, cfg=cfg, ep_axis="data", tp_axis=tp_axis)
+    body = functools.partial(
+        body_fn, cfg=cfg, ep_axis="data", ep_size=mesh.shape["data"],
+        tp_axis=tp_axis,
+    )
     y2d = shard_map(
         body,
         mesh=mesh,

@@ -19,9 +19,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.dag import Job, Stage, StageType, Task, TaskState
+from ..core.dag import Job, Stage, Task, TaskState
 from ..core.scheduler import ClusterView, Decision, Scheduler
-from ..sim.workloads import GeneratedJob, PlanningApp, get_generators
+from ..sim.workloads import GeneratedJob, get_generators, reveal_after_stage
 from .engine import LLMEngine, Request
 
 
@@ -80,24 +80,14 @@ class ServingCluster:
         rid_counter = [0]
 
         def on_stage_complete(job: Job, stage: Stage) -> None:
-            stage.revealed = True
-            for name in job.reveal_rules.get(stage.name, []):
-                job.stages[name].revealed = True
-            gen = gens.get(job.app.name)
-            for child in job.app.children(stage.name):
-                cst = job.stages.get(child)
-                if (
-                    cst is not None
-                    and cst.stype is StageType.DYNAMIC
-                    and not cst.revealed
-                    and isinstance(gen, PlanningApp)
-                ):
-                    gen.expand_dynamic(job, child)
+            # chain reveals + dynamic expansion + evidence-version bump
+            reveal_after_stage(job, stage, gens)
 
         def finish_task(task: Task) -> None:
             task.state = TaskState.DONE
             task.finish_time = now()
             job = job_by_id[task.job_id]
+            job.bump_evidence()  # new completed-duration evidence
             stage = job.stages[task.stage_name]
             if stage.done():
                 on_stage_complete(job, stage)
@@ -106,6 +96,7 @@ class ServingCluster:
                 res.jcts.append(job.finish_time - job.arrival_time / self.time_scale)
                 if job in active:
                     active.remove(job)
+                self.scheduler.observe_completion(job, now())
 
         def dispatch(dec: Decision) -> None:
             for t in dec.regular:
@@ -116,7 +107,9 @@ class ServingCluster:
                     if reg_running[e] is None:
                         t.state = TaskState.RUNNING
                         t.start_time = now()
-                        job_by_id[t.job_id].stages[t.stage_name].dispatched_tasks += 1
+                        job = job_by_id[t.job_id]
+                        job.stages[t.stage_name].dispatched_tasks += 1
+                        job.bump_evidence()  # running/unscheduled sets changed
                         deadline = now() + t.true_duration / self.time_scale
                         reg_running[e] = (deadline, t)
                         placed = True
@@ -133,7 +126,9 @@ class ServingCluster:
                 eng = min(cands, key=lambda e: e.batch_size)
                 t.state = TaskState.RUNNING
                 t.start_time = now()
-                job_by_id[t.job_id].stages[t.stage_name].dispatched_tasks += 1
+                job = job_by_id[t.job_id]
+                job.stages[t.stage_name].dispatched_tasks += 1
+                job.bump_evidence()  # running/unscheduled sets changed
                 rid_counter[0] += 1
                 n_tok = max(self.min_tokens, int(t.out_tokens / self.token_scale))
                 prompt = [1 + (hash(t.stage_name) % 32), 2 + t.index % 7]

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -67,6 +67,11 @@ class LLMEngine:
         self.free_slots = list(range(max_batch))
         self._tokens = np.zeros((max_batch,), np.int32)
         self._lat_samples: Dict[int, List[float]] = {}
+        # latency-profile memo: (sample-count fingerprint, profile).  The
+        # profile object's identity is stable between new measurements, so
+        # schedulers can key calibration caches on it instead of refitting
+        # l(b) on every scheduling round.
+        self._profile_memo: Optional[Tuple[Tuple[Tuple[int, int], ...], Optional[LatencyProfile]]] = None
 
         self._decode = jax.jit(
             lambda p, c, t: decode_step(p, cfg, c, t)
@@ -183,12 +188,20 @@ class LLMEngine:
     # -- calibration ----------------------------------------------------------
     def latency_profile(self) -> Optional[LatencyProfile]:
         """Measured l(b): per-token step latency per batch size (Eq. 2).
-        The first sample per batch size is dropped (JIT warm-up)."""
+        The first sample per batch size is dropped (JIT warm-up).
+
+        Refit only when new measurements arrived since the last call; the
+        returned object is otherwise identical, which lets incremental
+        schedulers reuse calibration-dependent caches across rounds.
+        """
+        fp = tuple(sorted((b, len(v)) for b, v in self._lat_samples.items()))
+        if self._profile_memo is not None and self._profile_memo[0] == fp:
+            return self._profile_memo[1]
         samples = {
             b: (v[1:] if len(v) > 1 else v)
             for b, v in self._lat_samples.items()
             if v
         }
-        if not samples:
-            return None
-        return measured_profile(samples)
+        prof = measured_profile(samples) if samples else None
+        self._profile_memo = (fp, prof)
+        return prof

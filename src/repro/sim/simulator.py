@@ -27,14 +27,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.calibration import LatencyProfile, roofline_profile
-from ..core.dag import Job, Stage, StageType, Task, TaskState
+from ..core.dag import Job, Stage, Task, TaskState
 from ..core.scheduler import ClusterView, Decision, Scheduler
 from .workloads import (
     TOKEN_LATENCY_B1,
-    AppGenerator,
     GeneratedJob,
-    PlanningApp,
     get_generators,
+    reveal_after_stage,
 )
 
 
@@ -159,21 +158,8 @@ class ClusterSim:
             return best_t, best_e
 
         def on_stage_complete(job: Job, stage: Stage) -> None:
-            stage.revealed = True
-            # chain reveals
-            for name in job.reveal_rules.get(stage.name, []):
-                job.stages[name].revealed = True
-            # dynamic expansion: when the parent LLM stage finishes
-            gen = gens.get(job.app.name)
-            for child in job.app.children(stage.name):
-                cst = job.stages.get(child)
-                if (
-                    cst is not None
-                    and cst.stype is StageType.DYNAMIC
-                    and not cst.revealed
-                    and isinstance(gen, PlanningApp)
-                ):
-                    gen.expand_dynamic(job, child)
+            # chain reveals + dynamic expansion + evidence-version bump
+            reveal_after_stage(job, stage, gens)
 
         def dispatch(dec: Decision) -> bool:
             did = False
@@ -187,6 +173,7 @@ class ClusterSim:
                         t.start_time = now
                         job = job_by_id[t.job_id]
                         job.stages[t.stage_name].dispatched_tasks += 1
+                        job.bump_evidence()  # running/unscheduled sets changed
                         dur = t.true_duration
                         if straggler_prob and self.rng.random() < straggler_prob:
                             dur *= 4.0 + 6.0 * self.rng.random()  # straggler
@@ -205,6 +192,7 @@ class ClusterSim:
                 t.start_time = now
                 job = job_by_id[t.job_id]
                 job.stages[t.stage_name].dispatched_tasks += 1
+                job.bump_evidence()  # running/unscheduled sets changed
                 llm_running[e].append(
                     RunningLLMTask(task=t, remaining_tokens=float(t.out_tokens), executor=e)
                 )
@@ -247,6 +235,7 @@ class ClusterSim:
                     if slot is not None:
                         slot[1].state = TaskState.PENDING
                         slot[1].start_time = -1.0
+                        job_by_id[slot[1].job_id].bump_evidence()
                         reg_running[victim] = None
                         res.preemptions += 1
                 else:
@@ -254,6 +243,7 @@ class ClusterSim:
                     for rt in llm_running[e]:
                         rt.task.state = TaskState.PENDING
                         rt.task.start_time = -1.0
+                        job_by_id[rt.task.job_id].bump_evidence()
                         res.preemptions += 1
                     llm_running[e] = []
                 t_fail = _next_failure(now)
@@ -319,6 +309,7 @@ class ClusterSim:
         task.state = TaskState.DONE
         task.finish_time = now
         job = job_by_id[task.job_id]
+        job.bump_evidence()  # new completed-duration evidence
         stage = job.stages[task.stage_name]
         if stage.done():
             on_stage_complete(job, stage)

@@ -498,6 +498,37 @@ class LLMCompiler(PlanningApp):
 
 
 # ---------------------------------------------------------------------------
+# Stage-completion bookkeeping shared by every runtime
+# ---------------------------------------------------------------------------
+def reveal_after_stage(
+    job: Job, stage: Stage, gens: Dict[str, AppGenerator]
+) -> None:
+    """Apply the observable consequences of ``stage`` finishing.
+
+    Used by the discrete-event simulator, the serving testbed, and the
+    scheduling benchmarks so all runtimes emit identical evidence events:
+    chain reveals, dynamic-stage expansion, and the ``evidence_version``
+    bump that invalidates incremental-scheduler caches for this job.
+    """
+    stage.revealed = True
+    # chain reveals
+    for name in job.reveal_rules.get(stage.name, []):
+        job.stages[name].revealed = True
+    # dynamic expansion: when the parent LLM stage finishes
+    gen = gens.get(job.app.name)
+    for child in job.app.children(stage.name):
+        cst = job.stages.get(child)
+        if (
+            cst is not None
+            and cst.stype is StageType.DYNAMIC
+            and not cst.revealed
+            and isinstance(gen, PlanningApp)
+        ):
+            gen.expand_dynamic(job, child)
+    job.bump_evidence()
+
+
+# ---------------------------------------------------------------------------
 # Workload mixes (paper §V "Workload generation")
 # ---------------------------------------------------------------------------
 ALL_GENERATORS: Dict[str, AppGenerator] = {}

@@ -1,0 +1,175 @@
+"""Minimal, dependency-free stand-in for the `hypothesis` API surface used
+by this test suite (``given`` / ``settings`` / ``strategies``).
+
+Installed by ``conftest.py`` into ``sys.modules['hypothesis']`` ONLY when
+the real package is unavailable (e.g. a hermetic container without network
+access), so the tier-1 suite still collects and runs everywhere.  CI and
+dev environments that ``pip install -e .[test]`` get real Hypothesis with
+shrinking, the example database, and far richer strategies — this fallback
+trades all of that for determinism and zero dependencies:
+
+- examples are drawn from a fixed-seed PRNG (fully reproducible runs);
+- each strategy emits its boundary values first (lo/hi endpoints,
+  min-size lists) before random interior draws;
+- a failing example is re-raised unchanged with the drawn values attached
+  to the exception message.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import types
+from typing import Any, Callable, List
+
+IS_FALLBACK = True
+
+__version__ = "0.0-fallback"
+
+
+# ---------------------------------------------------------------------------
+# Strategies
+# ---------------------------------------------------------------------------
+class SearchStrategy:
+    def draw(self, rnd: random.Random) -> Any:
+        raise NotImplementedError
+
+    def boundary(self) -> List[Any]:
+        """Deterministic edge-case examples, tried before random draws."""
+        return []
+
+    def example_at(self, rnd: random.Random, i: int) -> Any:
+        b = self.boundary()
+        if i < len(b):
+            return b[i]
+        return self.draw(rnd)
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: int, max_value: int) -> None:
+        self.lo, self.hi = int(min_value), int(max_value)
+
+    def draw(self, rnd: random.Random) -> int:
+        return rnd.randint(self.lo, self.hi)
+
+    def boundary(self) -> List[int]:
+        out = [self.lo, self.hi]
+        if self.hi - self.lo > 1:
+            out.append((self.lo + self.hi) // 2)
+        return out
+
+
+class _Floats(SearchStrategy):
+    def __init__(self, min_value: float, max_value: float) -> None:
+        self.lo, self.hi = float(min_value), float(max_value)
+
+    def draw(self, rnd: random.Random) -> float:
+        return rnd.uniform(self.lo, self.hi)
+
+    def boundary(self) -> List[float]:
+        return [self.lo, self.hi, 0.5 * (self.lo + self.hi)]
+
+
+class _Lists(SearchStrategy):
+    def __init__(
+        self,
+        elements: SearchStrategy,
+        min_size: int = 0,
+        max_size: int = 10,
+    ) -> None:
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size) if max_size is not None else min_size + 10
+
+    def draw(self, rnd: random.Random) -> list:
+        n = rnd.randint(self.min_size, self.max_size)
+        return [self.elements.draw(rnd) for _ in range(n)]
+
+    def boundary(self) -> List[list]:
+        eb = self.elements.boundary() or [self.elements.draw(random.Random(0))]
+        out = [[eb[0]] * max(self.min_size, 1)]
+        if len(eb) > 1:
+            out.append([eb[1]] * max(self.min_size, 1))
+        return out
+
+
+def integers(min_value: int = 0, max_value: int = 100) -> SearchStrategy:
+    return _Integers(min_value, max_value)
+
+
+def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> SearchStrategy:
+    return _Floats(min_value, max_value)
+
+
+def lists(elements: SearchStrategy, min_size: int = 0, max_size: int = 10,
+          **_kw) -> SearchStrategy:
+    return _Lists(elements, min_size=min_size, max_size=max_size)
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.floats = floats
+strategies.lists = lists
+strategies.SearchStrategy = SearchStrategy
+
+
+# ---------------------------------------------------------------------------
+# settings / given
+# ---------------------------------------------------------------------------
+_DEFAULT_MAX_EXAMPLES = 100
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn: Callable) -> Callable:
+        fn._hf_settings = {"max_examples": int(max_examples)}
+        return fn
+
+    return deco
+
+
+def given(*pos_strategies: SearchStrategy, **kw_strategies: SearchStrategy):
+    """Property decorator: runs the test once per generated example."""
+
+    def deco(fn: Callable) -> Callable:
+        sig = inspect.signature(fn)
+        params = list(sig.parameters)
+        kw_names = list(kw_strategies)
+        pos_names = [p for p in params if p not in kw_names][: len(pos_strategies)]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            conf = (
+                getattr(wrapper, "_hf_settings", None)
+                or getattr(fn, "_hf_settings", None)
+                or {}
+            )
+            n = conf.get("max_examples", _DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(0xC0FFEE)
+            for i in range(n):
+                drawn = {
+                    name: s.example_at(rnd, i)
+                    for name, s in zip(pos_names, pos_strategies)
+                }
+                drawn.update(
+                    {name: s.example_at(rnd, i) for name, s in kw_strategies.items()}
+                )
+                try:
+                    fn(*args, **{**kwargs, **drawn})
+                except Exception as e:  # attach the falsifying example
+                    e.args = (
+                        f"{e}\nFalsifying example (fallback hypothesis, "
+                        f"example #{i}): {drawn!r}",
+                    )
+                    raise
+
+        # hide the generated params from pytest's fixture resolution
+        remaining = [
+            p
+            for name, p in sig.parameters.items()
+            if name not in kw_names and name not in pos_names
+        ]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        return wrapper
+
+    return deco

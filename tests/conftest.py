@@ -1,0 +1,29 @@
+"""Test-suite bootstrap.
+
+If the real `hypothesis` package is installed (CI / dev environments via
+``pip install -e .[test]``) it is used untouched.  In hermetic
+environments without it, a minimal deterministic fallback implementing the
+same API surface (``given``/``settings``/``strategies``) is installed into
+``sys.modules`` so the tier-1 suite still collects and runs.
+"""
+
+import importlib.util
+import os
+import sys
+
+
+def _install_hypothesis_fallback() -> None:
+    try:
+        import hypothesis  # noqa: F401  (real package available)
+        return
+    except ImportError:
+        pass
+    path = os.path.join(os.path.dirname(__file__), "_hypothesis_fallback.py")
+    spec = importlib.util.spec_from_file_location("hypothesis", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = mod.strategies
+
+
+_install_hypothesis_fallback()

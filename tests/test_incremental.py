@@ -1,0 +1,308 @@
+"""Incremental scheduling core: cache invalidation, cached==fresh
+equivalence, `_merge` edge cases, and byte-identical decision sequences
+between the incremental and from-scratch schedulers on seeded runs."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import LLMSched, ProfileStore
+from repro.core.calibration import LatencyProfile
+from repro.core.dag import (
+    ApplicationTemplate,
+    StageTemplate,
+    StageType,
+    TaskState,
+    make_job,
+)
+from repro.core.entropy import uncertainty_reduction
+from repro.core.scheduler import ClusterView
+from repro.sim import generate_traces, generate_workload, get_generators
+from repro.sim.simulator import ClusterSim
+from repro.sim.workloads import reveal_after_stage
+
+
+@pytest.fixture(scope="module")
+def store():
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    return ProfileStore().fit(apps, generate_traces("mixed", 200, seed=7))
+
+
+def _view(**kw):
+    return ClusterView(now=0.0, free_regular=4, llm_loads=[(0, 8)], **kw)
+
+
+def _complete_stage(job, stage, now=1.0):
+    for t in stage.tasks:
+        t.state = TaskState.DONE
+        t.start_time = 0.0
+        t.finish_time = now
+    reveal_after_stage(job, stage, get_generators())
+
+
+# ---------------------------------------------------------------------------
+# Invalidation + cached == fresh
+# ---------------------------------------------------------------------------
+def test_cache_invalidated_on_stage_completion(store):
+    wl = generate_workload("predefined", 4, seed=21)
+    job = wl[0].job
+    p = store.get(job.app.name)
+
+    v0 = job.evidence_version
+    before = p.est_remaining(job, 0.0, version=v0)
+    # same version -> cache hit, identical scalar
+    assert p.est_remaining(job, 0.0, version=v0) == before
+
+    stage = job.ready_stages()[0]
+    _complete_stage(job, stage)
+    assert job.evidence_version > v0  # reveal_after_stage bumped it
+
+    after = p.est_remaining(job, 0.0, version=job.evidence_version)
+    fresh = p.est_remaining(job, 0.0)  # uncached reference path
+    assert after == fresh
+    assert after < before  # finished work no longer counts
+
+
+def test_cached_matches_fresh_along_job_lifetime(store):
+    """Drive jobs through stage completions; at every step the versioned
+    (cached) estimates must equal the version-less (recomputed) ones."""
+    wl = generate_workload("mixed", 10, seed=33)
+    for gj in wl:
+        job = gj.job
+        p = store.get(job.app.name)
+        if p is None:
+            continue
+        for _ in range(8):
+            v = job.evidence_version
+            assert p.est_remaining(job, 0.0, version=v) == p.est_remaining(job, 0.0)
+            assert p.job_bounds(job, version=v) == p.job_bounds(job)
+            ready = job.ready_stages()
+            if not ready:
+                break
+            names = [s.name for s in ready]
+            batched = p.stage_uncertainty_reductions(job, names, version=v)
+            single = [p.stage_uncertainty_reduction(job, n) for n in names]
+            assert batched == single
+            _complete_stage(job, ready[0])
+
+
+def test_batched_ur_matches_reference_algorithm(store):
+    """stage_uncertainty_reductions == the paper's per-stage Eq. 6 path."""
+    wl = generate_workload("mixed", 8, seed=44)
+    for gj in wl:
+        job = gj.job
+        p = store.get(job.app.name)
+        ready = job.ready_stages()
+        if p is None or not p._fitted or not ready:
+            continue
+        names = [s.name for s in ready]
+        got = p.stage_uncertainty_reductions(job, names)
+        ev = p.evidence_for(job)
+        unscheduled = [
+            n
+            for n, s in job.stages.items()
+            if not s.obs_done() and not s.running() and s.dispatched_tasks == 0
+        ]
+        for name, g in zip(names, got):
+            bonus = p._dynamic_bonus(job, name, ev)
+            if name not in p.bn.nodes:
+                want = float(bonus)
+            else:
+                want = uncertainty_reduction(
+                    p.bn, p.discretizers, name, unscheduled, ev,
+                    dynamic_bonus=bonus,
+                )
+            assert g == want, name
+
+
+def test_stale_version_is_callers_contract(store):
+    """Passing an unbumped version after mutation returns the stale value —
+    documenting that runtimes MUST bump evidence_version on events."""
+    wl = generate_workload("predefined", 2, seed=55)
+    job = wl[0].job
+    p = store.get(job.app.name)
+    v = job.evidence_version
+    stale = p.est_remaining(job, 0.0, version=v)
+    for t in job.ready_stages()[0].tasks:  # mutate WITHOUT bumping
+        t.state = TaskState.DONE
+        t.start_time, t.finish_time = 0.0, 1.0
+    assert p.est_remaining(job, 0.0, version=v) == stale
+    job.bump_evidence()
+    assert p.est_remaining(job, 0.0, version=job.evidence_version) != stale
+
+
+def test_calibration_context_not_overcached(store):
+    """Same evidence version, different target batch -> different estimate."""
+    wl = generate_workload("predefined", 2, seed=4)
+    job = wl[0].job
+    lat = LatencyProfile(np.arange(1, 9), 0.02 * (0.8 + 0.2 * np.arange(1, 9)))
+    sched = LLMSched(store, epsilon=0.0, incremental=True)
+    v1 = _view(latency_profile=lat)
+    v2 = ClusterView(now=0.0, free_regular=4, llm_loads=[(7, 8)],
+                     latency_profile=lat)
+    e1 = sched.est_rd(job, v1)
+    e2 = sched.est_rd(job, v2)
+    assert e2 > e1
+    # and repeat queries stay cache-consistent
+    assert sched.est_rd(job, v1) == e1
+    assert sched.est_rd(job, v2) == e2
+
+
+def test_forget_job_evicts_slots(store):
+    wl = generate_workload("predefined", 2, seed=66)
+    job = wl[0].job
+    p = store.get(job.app.name)
+    p.est_remaining(job, 0.0, version=job.evidence_version)
+    p.job_bounds(job, version=job.evidence_version)
+    p.stage_uncertainty_reductions(
+        job, [s.name for s in job.ready_stages()], version=job.evidence_version
+    )
+    assert (job.job_id, True) in p._job_base
+    store.forget_job(job.job_id)
+    assert (job.job_id, True) not in p._job_base
+    assert (job.job_id, True) not in p._job_rd
+    assert (job.job_id, True) not in p._job_bounds
+    assert job.job_id not in p._job_ev
+    assert job.job_id not in p._job_ur
+
+
+# ---------------------------------------------------------------------------
+# Vectorized interval grouping
+# ---------------------------------------------------------------------------
+def _scalar_groups(bounds):
+    """Reference implementation (pre-vectorization semantics)."""
+    if not bounds:
+        return []
+    bounds = sorted(bounds, key=lambda t: (t[0], t[1]))
+    groups = [[bounds[0][2]]]
+    cur_hi = bounds[0][1]
+    for lo, hi, job in bounds[1:]:
+        if lo <= cur_hi:
+            groups[-1].append(job)
+            cur_hi = max(cur_hi, hi)
+        else:
+            groups.append([job])
+            cur_hi = hi
+    return groups
+
+
+def test_vectorized_grouping_matches_scalar_reference():
+    rng = np.random.default_rng(0)
+    for trial in range(200):
+        n = int(rng.integers(0, 40))
+        bounds = []
+        for i in range(n):
+            lo = float(rng.choice([0.0, 1.0, rng.uniform(0, 50)]))
+            width = float(rng.choice([0.0, rng.uniform(0, 20)]))
+            hi = lo + width if rng.random() > 0.05 else math.inf
+            bounds.append((lo, hi, i))
+        got = LLMSched.non_overlapping_sets(list(bounds))
+        want = _scalar_groups(list(bounds))
+        assert got == want, (trial, bounds)
+
+
+# ---------------------------------------------------------------------------
+# _merge edge cases
+# ---------------------------------------------------------------------------
+def _toy_jobs(n_stages=3, num_tasks=4, llm=False):
+    stype = StageType.LLM if llm else StageType.REGULAR
+    tpls = [StageTemplate(f"s{i}", stype, num_tasks=num_tasks) for i in range(n_stages)]
+    app = ApplicationTemplate("toy_merge", tpls, edges=[])
+    job = make_job(app, 0.0)
+    for s in job.stages.values():
+        s.revealed = True
+    return job
+
+
+def _sched(eps, ratio=0.3, seed=0):
+    return LLMSched(ProfileStore(), epsilon=eps, sampling_ratio=ratio, seed=seed)
+
+
+def test_merge_empty_su_is_pure_srtf_order():
+    job = _toy_jobs(3)
+    s_t = job.ready_stages()
+    dec = _sched(eps=1.0)._merge(list(s_t), [])
+    want = [t for s in s_t for t in s.pending_tasks()]
+    assert dec.regular == want
+    assert dec.llm == []
+
+
+def test_merge_exploration_pick_coinciding_with_srtf_head_runs_fully():
+    job = _toy_jobs(2, num_tasks=5)
+    s_t = job.ready_stages()
+    head = s_t[0]
+    # epsilon=1 -> always explore; s_u head == SRTF head -> NO sampling split
+    dec = _sched(eps=1.0, ratio=0.2)._merge(list(s_t), [head, s_t[1]])
+    head_tasks = head.pending_tasks()
+    assert dec.regular[: len(head_tasks)] == head_tasks  # contiguous, no deferral
+
+
+def test_merge_deferred_tasks_come_last_in_order():
+    job_a = _toy_jobs(1, num_tasks=6)
+    job_b = _toy_jobs(1, num_tasks=6)
+    (sa,) = job_a.ready_stages()
+    (sb,) = job_b.ready_stages()
+    # SRTF prefers A; exploration always picks B with ratio 1/3 -> 2 tasks
+    dec = _sched(eps=1.0, ratio=1 / 3)._merge([sa], [sb])
+    b_tasks = sb.pending_tasks()
+    a_tasks = sa.pending_tasks()
+    k = math.ceil(len(b_tasks) / 3)
+    assert dec.regular[:k] == b_tasks[:k]          # sampled exploration slice
+    assert dec.regular[k : k + len(a_tasks)] == a_tasks  # then the SRTF stage
+    assert dec.regular[k + len(a_tasks) :] == b_tasks[k:]  # deferred last, in order
+
+
+def test_merge_no_duplicates_under_any_epsilon(store):
+    for eps in (0.0, 0.25, 0.75, 1.0):
+        wl = generate_workload("mixed", 6, seed=13)
+        jobs = [gj.job for gj in wl]
+        dec = LLMSched(store, epsilon=eps, seed=3).schedule(jobs, _view())
+        tasks = dec.regular + dec.llm
+        assert len({id(t) for t in tasks}) == len(tasks)
+
+
+# ---------------------------------------------------------------------------
+# Decision-sequence equivalence on a seeded simulator run
+# ---------------------------------------------------------------------------
+def _record_run(incremental, fail=0.0, strag=0.0):
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 120, seed=7))
+    wl = generate_workload("mixed", 20, seed=11)
+    pos = {gj.job.job_id: i for i, gj in enumerate(wl)}
+    sched = LLMSched(store, epsilon=0.3, seed=5, incremental=incremental)
+    log = []
+    orig = sched.schedule
+
+    def recording(jobs, view):
+        dec = orig(jobs, view)
+        log.append(
+            tuple(
+                (pos[t.job_id], t.stage_name, t.index, t.is_llm)
+                for t in dec.regular + dec.llm
+            )
+        )
+        return dec
+
+    sched.schedule = recording
+    res = ClusterSim(
+        sched, n_regular=3, n_llm=2, max_batch=4, seed=0,
+        failure_rate=fail, straggler_factor=strag,
+    ).run(wl)
+    return log, res
+
+
+def test_incremental_decisions_byte_identical_to_fresh():
+    log_inc, res_inc = _record_run(True)
+    log_ref, res_ref = _record_run(False)
+    assert log_inc == log_ref
+    assert res_inc.jcts == res_ref.jcts
+    assert res_inc.makespan == res_ref.makespan
+
+
+def test_incremental_decisions_identical_under_fault_injection():
+    log_inc, _ = _record_run(True, fail=0.01, strag=2.0)
+    log_ref, _ = _record_run(False, fail=0.01, strag=2.0)
+    assert log_inc == log_ref

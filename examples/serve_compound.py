@@ -2,25 +2,31 @@
 
 A REAL continuous-batching engine (jitted JAX decode over a smoke-size
 stablelm-family model) serves compound LLM jobs whose admission order is
-decided by LLMSched; compare against FCFS on the same workload.
+decided by LLMSched; compare against FCFS on the same workload, with
+both the slot-based and the paged KV-cache engine.
 
 Run:  PYTHONPATH=src python examples/serve_compound.py
 """
 
 from repro.configs import get_smoke_config
 from repro.core import FCFS, LLMSched, ProfileStore
-from repro.serving import LLMEngine, ServingCluster
+from repro.serving import LLMEngine, PagedLLMEngine, ServingCluster
 from repro.sim import generate_traces, generate_workload, get_generators
 
 
-def run_one(name: str, sched, wl, cfg):
-    engines = [LLMEngine(cfg, max_batch=4, max_len=96, seed=0)]
+def run_one(name: str, sched, wl, cfg, engine: str = "slot"):
+    if engine == "paged":
+        engines = [PagedLLMEngine(cfg, max_seqs=8, max_len=96,
+                                  page_size=16, seed=0)]
+    else:
+        engines = [LLMEngine(cfg, max_batch=4, max_len=96, seed=0)]
     cluster = ServingCluster(sched, engines, n_regular=4,
                             token_scale=24.0, time_scale=24.0)
     res = cluster.run(wl)
-    print(f"{name:10s} avg_jct={res.avg_jct:6.2f}s jobs={len(res.jcts)} "
-          f"tokens={res.tokens_generated} "
-          f"sched_overhead={res.avg_overhead_ms:.2f}ms")
+    print(f"{name:10s} engine={engine:5s} avg_jct={res.avg_jct:6.2f}s "
+          f"jobs={len(res.jcts)} tokens={res.tokens_generated} "
+          f"sched_overhead={res.avg_overhead_ms:.2f}ms "
+          f"preemptions={res.preemptions}")
     return res
 
 
@@ -31,12 +37,13 @@ def main() -> None:
     cfg = get_smoke_config("stablelm_1_6b")
     print(f"engine model: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
 
-    for name, sched in [
-        ("llmsched", LLMSched(store, epsilon=0.2, seed=0)),
-        ("fcfs", FCFS()),
-    ]:
-        wl = generate_workload("planning", 12, arrival_rate=0.9, seed=11)
-        run_one(name, sched, wl, cfg)
+    for engine in ("slot", "paged"):
+        for name, sched in [
+            ("llmsched", LLMSched(store, epsilon=0.2, seed=0)),
+            ("fcfs", FCFS()),
+        ]:
+            wl = generate_workload("planning", 12, arrival_rate=0.9, seed=11)
+            run_one(name, sched, wl, cfg, engine=engine)
 
 
 if __name__ == "__main__":

@@ -6,7 +6,9 @@ Each kernel ships three files per the repo contract:
 - ``ref.py``    — pure-jnp oracle, the semantics ground truth.
 
 Kernels: flash_attention (prefill/train), decode_attention (serving decode
-hot spot), rmsnorm (fused norm), ssm_scan (Mamba selective scan).
+hot spot, slot caches), paged_attention (serving decode over paged KV
+pools with block tables), rmsnorm (fused norm), ssm_scan (Mamba selective
+scan).
 """
 
 from . import ops, ref

@@ -65,6 +65,25 @@ def decode_attention(
     return _ref.decode_attention_ref(q, k_cache, v_cache, lengths, scale=scale)
 
 
+def paged_decode_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    lengths: jax.Array,
+    scale: Optional[float] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Decode attention over a paged KV pool via per-request block tables."""
+    if _pick(impl) == "pallas":
+        from .paged_attention import paged_decode_attention as _pda
+
+        return _pda(q, k_pages, v_pages, block_tables, lengths, scale=scale)
+    return _ref.paged_decode_attention_ref(
+        q, k_pages, v_pages, block_tables, lengths, scale=scale
+    )
+
+
 def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5,
             impl: str = "auto") -> jax.Array:
     if _pick(impl) == "pallas":

@@ -1,0 +1,160 @@
+"""Paged GQA decode attention — vLLM-style PagedAttention in Pallas.
+
+The KV cache lives in a pool of fixed-size pages; each request owns a
+block table mapping its logical token positions to physical pages.  One
+new query token per request attends to its full (paged) history.
+
+Kernel shape: grid = (batch · kv_head, pages_per_seq) with the page
+dimension sequential.  The block table and valid lengths ride in scalar
+prefetch; the K/V *index maps read the block table*, so each program DMAs
+exactly one physical page — the gather never materializes a dense cache.
+Flash-style running max/sum scratch accumulates across pages, and the
+whole q-head group (g rows) is processed per program so every page is
+streamed HBM→VMEM exactly once for all grouped heads.
+
+Pages past a request's length are skipped (the DMA still runs — index
+maps are unconditional — but the FLOPs and the accumulator update are
+predicated off, and freed/garbage page contents are masked to ±NEG_INF /
+zero so recycled pages can never leak into another request's output).
+
+Layout note: pools are stored token-major, ``(P, page_size, K, hd)`` —
+the layout the engine's scatter-writes want — and transposed to
+``(K, P, page_size, hd)`` at call time so the kernel's trailing two dims
+are (page_size, head_dim), which tiles cleanly on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    bt_ref,       # (B, npp) int32 in SMEM — block tables
+    len_ref,      # (B,) int32 in SMEM — valid lengths (incl. current token)
+    q_ref,        # (1, g, hd)
+    k_ref,        # (1, 1, page_size, hd) — the page this program visits
+    v_ref,        # (1, 1, page_size, hd_v)
+    o_ref,        # (1, g, hd_v)
+    m_scr,        # (g, 1)
+    l_scr,        # (g, 1)
+    acc_scr,      # (g, hd_v)
+    *,
+    scale: float,
+    page_size: int,
+    n_kv_heads: int,
+):
+    bh = pl.program_id(0)
+    pi = pl.program_id(1)
+    npp = pl.num_programs(1)
+    b = bh // n_kv_heads
+    length = len_ref[b]
+    t_start = pi * page_size
+
+    @pl.when(pi == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    def _accumulate():
+        q = q_ref[0].astype(jnp.float32) * scale              # (g, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                   # (ps, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                      # (g, ps)
+        cols = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1) + t_start
+        s = jnp.where(cols < length, s, NEG_INF)
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)                   # (ps, hd_v)
+        # sanitize rows past `length` (p is 0 there, but 0*NaN = NaN)
+        vrow = jax.lax.broadcasted_iota(jnp.int32, v.shape, 0) + t_start
+        v = jnp.where(vrow < length, v, 0.0)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    # pages wholly beyond this request's history contribute nothing
+    pl.when(t_start < length)(_accumulate)
+
+    @pl.when(pi == npp - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(
+    q: jax.Array,             # (B, H, hd)
+    k_pages: jax.Array,       # (P, page_size, K, hd) physical page pool
+    v_pages: jax.Array,       # (P, page_size, K, hd_v)
+    block_tables: jax.Array,  # (B, pages_per_seq) int32 page ids
+    lengths: jax.Array,       # (B,) int32 — valid tokens (incl. current)
+    scale: Optional[float] = None,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, H, hd = q.shape
+    P, page_size, K, hd_v = (
+        k_pages.shape[0], k_pages.shape[1], k_pages.shape[2], v_pages.shape[3]
+    )
+    npp = block_tables.shape[1]
+    g = H // K
+    scale = scale if scale is not None else hd ** -0.5
+
+    qr = q.reshape(B, K, g, hd).reshape(B * K, g, hd)
+    kr = k_pages.transpose(2, 0, 1, 3)   # (K, P, ps, hd)
+    vr = v_pages.transpose(2, 0, 1, 3)   # (K, P, ps, hd_v)
+
+    kernel = functools.partial(
+        _paged_decode_kernel,
+        scale=scale,
+        page_size=page_size,
+        n_kv_heads=K,
+    )
+
+    import jax.experimental.pallas.tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (block_tables, lengths)
+        grid=(B * K, npp),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda bh, j, bt, lens: (bh, 0, 0)),
+            # the paged gather: the page index comes from the block table
+            pl.BlockSpec(
+                (1, 1, page_size, hd),
+                lambda bh, j, bt, lens: (bh % K, bt[bh // K, j], 0, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, page_size, hd_v),
+                lambda bh, j, bt, lens: (bh % K, bt[bh // K, j], 0, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd_v), lambda bh, j, bt, lens: (bh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd_v), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * K, g, hd_v), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qr, kr, vr)
+    return out.reshape(B, K, g, hd_v).reshape(B, H, hd_v)

@@ -73,6 +73,39 @@ def decode_attention_ref(
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention: single query token vs a paged KV pool addressed
+# through per-request block tables (vLLM-style PagedAttention)
+# ---------------------------------------------------------------------------
+def gather_pages(
+    pages: jax.Array,         # (P, page_size, K, hd) physical page pool
+    block_tables: jax.Array,  # (B, pages_per_seq) int32 page ids
+) -> jax.Array:
+    """Materialize the dense (B, S, K, hd) view a block table describes.
+
+    Token t of request b lives at (block_tables[b, t // ps], t % ps);
+    gathering page-by-page therefore reconstructs positions in order.
+    """
+    P, ps, K, hd = pages.shape
+    B, npp = block_tables.shape
+    flat = pages.reshape(P * ps, K, hd)
+    tok = block_tables[:, :, None] * ps + jnp.arange(ps)[None, None, :]
+    return flat[tok.reshape(B, npp * ps)]
+
+
+def paged_decode_attention_ref(
+    q: jax.Array,             # (B, H, hd)
+    k_pages: jax.Array,       # (P, page_size, K, hd)
+    v_pages: jax.Array,       # (P, page_size, K, hd_v)
+    block_tables: jax.Array,  # (B, pages_per_seq) int32
+    lengths: jax.Array,       # (B,) int32 — valid tokens (incl. current)
+    scale: Optional[float] = None,
+) -> jax.Array:
+    k_dense = gather_pages(k_pages, block_tables)
+    v_dense = gather_pages(v_pages, block_tables)
+    return decode_attention_ref(q, k_dense, v_dense, lengths, scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # RMSNorm
 # ---------------------------------------------------------------------------
 def rmsnorm_ref(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:

@@ -16,7 +16,7 @@ import argparse
 
 from repro.configs import get_smoke_config
 from repro.core import LLMSched, ProfileStore, make_baselines
-from repro.serving import LLMEngine, ServingCluster
+from repro.serving import LLMEngine, PagedLLMEngine, ServingCluster
 from repro.sim import generate_traces, generate_workload, get_generators
 
 
@@ -36,7 +36,10 @@ def main(argv=None) -> int:
                     choices=["llmsched", "fcfs", "fair", "sjf", "argus",
                              "carbyne", "decima"])
     ap.add_argument("--engines", type=int, default=1)
+    ap.add_argument("--engine", default="slot", choices=["slot", "paged"],
+                    help="slot: dense per-slot KV; paged: block-table pool")
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--regular", type=int, default=4)
     ap.add_argument("--epsilon", type=float, default=0.2)
     ap.add_argument("--token-scale", type=float, default=20.0)
@@ -48,10 +51,18 @@ def main(argv=None) -> int:
     store = ProfileStore().fit(apps, generate_traces(args.mix, 300, seed=7))
 
     cfg = get_smoke_config(args.arch)
-    engines = [
-        LLMEngine(cfg, max_batch=args.max_batch, max_len=96, seed=args.seed + i)
-        for i in range(args.engines)
-    ]
+    if args.engine == "paged":
+        engines = [
+            PagedLLMEngine(cfg, max_seqs=args.max_batch, max_len=96,
+                           page_size=args.page_size, seed=args.seed + i)
+            for i in range(args.engines)
+        ]
+    else:
+        engines = [
+            LLMEngine(cfg, max_batch=args.max_batch, max_len=96,
+                      seed=args.seed + i)
+            for i in range(args.engines)
+        ]
     sched = build_scheduler(args.scheduler, store, args.epsilon, args.seed)
     cluster = ServingCluster(
         sched, engines, n_regular=args.regular,
@@ -62,7 +73,8 @@ def main(argv=None) -> int:
     print(
         f"[serve] scheduler={args.scheduler} mix={args.mix} jobs={len(res.jcts)} "
         f"avg_jct={res.avg_jct:.2f}s makespan={res.makespan:.1f}s "
-        f"tokens={res.tokens_generated} overhead={res.avg_overhead_ms:.2f}ms"
+        f"tokens={res.tokens_generated} overhead={res.avg_overhead_ms:.2f}ms "
+        f"preemptions={res.preemptions}"
     )
     return 0
 

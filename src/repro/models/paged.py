@@ -1,0 +1,217 @@
+"""Paged KV-cache model path (vLLM-style) for the serving engine.
+
+Instead of one dense ``(B, S_max, K, hd)`` slot cache per attention layer,
+K/V live in a shared pool of fixed-size pages, ``(P, page_size, K, hd)``,
+and each request owns a *block table* mapping logical token positions to
+physical pages.  The same block table is shared by every layer (each
+layer has its own physical pool, like vLLM), so allocation is a single
+host-side decision per page.
+
+Three entry points, mirroring ``transformer.py``'s cache contract:
+
+- :func:`init_paged_pools` — allocate the per-layer page pools;
+- :func:`paged_prefill_chunk` — run one prompt chunk (attending to the
+  pages written by earlier chunks) and scatter its K/V into the pools;
+  chunked prefill is what lets long prompts interleave with decode steps;
+- :func:`paged_decode_step` — one decode token for a batch of requests,
+  writing through block tables and attending via the paged kernel.
+
+Supported architectures are the pure-attention decoder families (every
+layer ``attn+{mlp,dense_mlp,moe}``, no prefix/cross/MLA/recurrent
+layers and no int8 cache) — checked by :func:`supports_paged`.  The
+numerics intentionally match the slot path bit-for-bit under greedy
+decoding: positions past a request's length are masked to an exact
+softmax weight of 0 in both paths, so recycled page garbage can never
+reach the output (tested token-for-token in ``tests/test_paged_engine``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import layers as L
+from .config import ModelConfig
+from .transformer import _apply_ffn, _scan_layout, layer_kind
+
+Params = Dict[str, Any]
+Pools = Dict[str, Any]
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """True when every layer's mixer is plain GQA attention."""
+    if cfg.family not in ("dense", "moe") or cfg.kv_cache_dtype == "int8":
+        return False
+    if cfg.mla is not None or cfg.mamba is not None or cfg.encoder is not None:
+        return False
+    n_prefix, pat, n_sb = _scan_layout(cfg)
+    if n_prefix or n_sb == 0:
+        return False
+    kinds = [layer_kind(cfg, j).split("+")[0] for j in range(pat)]
+    return all(k == "attn" for k in kinds)
+
+
+def init_paged_pools(
+    cfg: ModelConfig, num_pages: int, page_size: int
+) -> Pools:
+    """Per-pattern-position page pools, stacked over superblocks.
+
+    Shape mirrors ``init_cache``'s ``blocks`` tree: pools["blocks"][j] is
+    ``{"k","v": (n_sb, P, page_size, K, hd)}``.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(
+            f"config {cfg.name!r} is not paged-KV compatible "
+            "(requires a pure-attention decoder, fp/bf16 cache)"
+        )
+    _, pat, n_sb = _scan_layout(cfg)
+    K, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.jdtype
+    blocks = {
+        str(j): {
+            "k": jnp.zeros((n_sb, num_pages, page_size, K, hd), dt),
+            "v": jnp.zeros((n_sb, num_pages, page_size, K, hd), dt),
+        }
+        for j in range(pat)
+    }
+    return {"blocks": blocks}
+
+
+def _scatter_tokens(
+    pool: jax.Array,       # (P, ps, K, hd)
+    flat_idx: jax.Array,   # (T,) int32 — page*ps + offset per token
+    values: jax.Array,     # (T, K, hd)
+) -> jax.Array:
+    P, ps, K, hd = pool.shape
+    flat = pool.reshape(P * ps, K, hd)
+    flat = flat.at[flat_idx].set(values.astype(flat.dtype))
+    return flat.reshape(P, ps, K, hd)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+def paged_decode_step(
+    params: Params,
+    cfg: ModelConfig,
+    pools: Pools,
+    tokens: jax.Array,        # (B,) int32 — one new token per request
+    block_tables: jax.Array,  # (B, pages_per_seq) int32
+    lengths: jax.Array,       # (B,) int32 — tokens already in cache
+) -> Tuple[jax.Array, Pools]:
+    """One decode step over paged KV; returns (logits (B, V), pools)."""
+    B = tokens.shape[0]
+    _, pat, n_sb = _scan_layout(cfg)
+    ps = pools["blocks"]["0"]["k"].shape[2]
+    x = L.embed(params, tokens[:, None]).astype(cfg.jdtype)
+
+    rows = jnp.arange(B)
+    write_page = block_tables[rows, lengths // ps]          # (B,)
+    write_flat = write_page * ps + lengths % ps             # (B,)
+    kinds = [layer_kind(cfg, j) for j in range(pat)]
+
+    def layer(p: Params, pool: Dict[str, jax.Array], j: int, x: jax.Array):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = L._proj_qkv(p["attn"], cfg, h, h)         # (B,1,·,hd)
+        pos = lengths[:, None]
+        q = L.rope(q, pos, cfg.rope_theta)
+        k = L.rope(k, pos, cfg.rope_theta)
+        pool_k = _scatter_tokens(pool["k"], write_flat, k[:, 0])
+        pool_v = _scatter_tokens(pool["v"], write_flat, v[:, 0])
+        out = ops.paged_decode_attention(
+            q[:, 0], pool_k, pool_v, block_tables, lengths + 1
+        )
+        x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+        x = _apply_ffn(p, cfg, kinds[j], x, decoding=True)
+        return x, {"k": pool_k, "v": pool_v}
+
+    def body(x, xs):
+        new_blk = {}
+        for j in range(pat):
+            p, pool = xs[str(j)]
+            x, new_blk[str(j)] = layer(p, pool, j, x)
+        return x, new_blk
+
+    xs = {
+        str(j): (params["blocks"][str(j)], pools["blocks"][str(j)])
+        for j in range(pat)
+    }
+    x, new_blocks = jax.lax.scan(body, x, xs)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params, x, cfg.tie_embeddings)
+    return logits[:, 0], {"blocks": new_blocks}
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+def paged_prefill_chunk(
+    params: Params,
+    cfg: ModelConfig,
+    pools: Pools,
+    tokens: jax.Array,        # (1, C) int32 — this chunk of the prompt
+    block_table: jax.Array,   # (pages_per_seq,) int32
+    past: int,                # tokens of this prompt already prefilled
+) -> Tuple[jax.Array, Pools]:
+    """Run one prompt chunk for a single request; returns (logits, pools).
+
+    The chunk's queries attend causally to (already-paged history + the
+    chunk itself); its K/V are scattered into the pools at positions
+    ``past .. past+C``.  ``past`` is static per jit specialization —
+    chunk boundaries are multiples of the chunk size, so the number of
+    distinct compilations is tiny.  Returned logits cover the whole
+    chunk, ``(1, C, V)``.
+    """
+    _, pat, n_sb = _scan_layout(cfg)
+    ps = pools["blocks"]["0"]["k"].shape[2]
+    C = tokens.shape[1]
+    ctx = past + C
+    n_ctx_pages = -(-ctx // ps)          # static: pages holding the context
+    x = L.embed(params, tokens).astype(cfg.jdtype)
+    positions = (past + jnp.arange(C))[None, :]             # (1, C)
+    write_flat = block_table[(past + jnp.arange(C)) // ps] * ps + (
+        past + jnp.arange(C)
+    ) % ps
+    ctx_flat = (
+        block_table[:n_ctx_pages, None] * ps + jnp.arange(ps)[None, :]
+    ).reshape(-1)                                           # (n_ctx_pages*ps,)
+    kv_len = jnp.array([ctx], jnp.int32)
+    kinds = [layer_kind(cfg, j) for j in range(pat)]
+
+    def layer(p: Params, pool: Dict[str, jax.Array], j: int, x: jax.Array):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        q, k, v = L._proj_qkv(p["attn"], cfg, h, h)
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+        pool_k = _scatter_tokens(pool["k"], write_flat, k[0])
+        pool_v = _scatter_tokens(pool["v"], write_flat, v[0])
+        K, hd = cfg.n_kv_heads, cfg.hd
+        k_ctx = pool_k.reshape(-1, K, hd)[ctx_flat][None]   # (1, n_ctx, K, hd)
+        v_ctx = pool_v.reshape(-1, K, hd)[ctx_flat][None]
+        out = ops.attention(
+            q, k_ctx, v_ctx, causal=True, q_offset=past, kv_len=kv_len
+        )
+        x = x + out.reshape(1, C, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
+        x = _apply_ffn(p, cfg, kinds[j], x)
+        return x, {"k": pool_k, "v": pool_v}
+
+    def body(x, xs):
+        new_blk = {}
+        for j in range(pat):
+            p, pool = xs[str(j)]
+            x, new_blk[str(j)] = layer(p, pool, j, x)
+        return x, new_blk
+
+    xs = {
+        str(j): (params["blocks"][str(j)], pools["blocks"][str(j)])
+        for j in range(pat)
+    }
+    x, new_blocks = jax.lax.scan(body, x, xs)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params, x, cfg.tie_embeddings)
+    return logits, {"blocks": new_blocks}

@@ -1,6 +1,17 @@
-"""Serving runtime: continuous-batching engines + compound-job testbed."""
+"""Serving runtime: continuous-batching engines + compound-job testbed.
+
+Two interchangeable executors:
+- :class:`LLMEngine` — slot-based (dense per-slot KV, max_batch slots);
+- :class:`PagedLLMEngine` — paged KV pool + block tables (vLLM-style),
+  capacity-based admission, chunked prefill, preemption-by-eviction.
+"""
 
 from .engine import LLMEngine, Request
+from .paged_cache import PageAllocator, TRASH_PAGE
+from .paged_engine import PagedLLMEngine
 from .cluster import ServingCluster, TestbedResult
 
-__all__ = ["LLMEngine", "Request", "ServingCluster", "TestbedResult"]
+__all__ = [
+    "LLMEngine", "PagedLLMEngine", "Request", "PageAllocator", "TRASH_PAGE",
+    "ServingCluster", "TestbedResult",
+]

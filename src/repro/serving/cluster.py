@@ -28,9 +28,11 @@ from .engine import LLMEngine, Request
 @dataclass
 class TestbedResult:
     jcts: List[float] = field(default_factory=list)
+    jct_by_job: Dict[int, float] = field(default_factory=dict)
     sched_overhead_s: List[float] = field(default_factory=list)
     makespan: float = 0.0
     tokens_generated: int = 0
+    preemptions: int = 0  # paged-engine evictions (pages freed + requeue)
 
     @property
     def avg_jct(self) -> float:
@@ -93,7 +95,9 @@ class ServingCluster:
                 on_stage_complete(job, stage)
             if job.done():
                 job.finish_time = now()
-                res.jcts.append(job.finish_time - job.arrival_time / self.time_scale)
+                jct = job.finish_time - job.arrival_time / self.time_scale
+                res.jcts.append(jct)
+                res.jct_by_job[job.job_id] = jct
                 if job in active:
                     active.remove(job)
                 self.scheduler.observe_completion(job, now())
@@ -119,16 +123,19 @@ class ServingCluster:
             for t in dec.llm:
                 if t.state is not TaskState.PENDING:
                     continue
-                # least-loaded engine with a free slot (paper §IV-D)
+                # least-loaded admissible engine (paper §IV-D); paged
+                # engines refuse admission when their page pool is
+                # exhausted, so placement is KV-capacity-aware and the
+                # scheduler's dispatch order decides who gets the memory
                 cands = [e for e in self.engines if e.can_admit()]
                 if not cands:
                     break
-                eng = min(cands, key=lambda e: e.batch_size)
-                t.state = TaskState.RUNNING
-                t.start_time = now()
-                job = job_by_id[t.job_id]
-                job.stages[t.stage_name].dispatched_tasks += 1
-                job.bump_evidence()  # running/unscheduled sets changed
+                cands.sort(
+                    key=lambda e: (
+                        e.batch_size,
+                        -getattr(e, "free_token_capacity", 0),
+                    )
+                )
                 rid_counter[0] += 1
                 n_tok = max(self.min_tokens, int(t.out_tokens / self.token_scale))
                 prompt = [1 + (hash(t.stage_name) % 32), 2 + t.index % 7]
@@ -138,15 +145,23 @@ class ServingCluster:
                     res.tokens_generated += len(req.out_tokens)
                     finish_task(task)
 
-                eng.admit(
-                    Request(
-                        rid=rid_counter[0],
-                        prompt=prompt,
-                        max_new_tokens=n_tok,
-                        submitted_at=now(),
-                        on_finish=_done,
-                    )
+                req = Request(
+                    rid=rid_counter[0],
+                    prompt=prompt,
+                    max_new_tokens=n_tok,
+                    submitted_at=now(),
+                    on_finish=_done,
                 )
+                # can_admit() is a cheap pre-filter; a paged engine may
+                # still refuse a multi-page prompt, so fall through to
+                # the next-best candidate before giving up on the task
+                if not any(e.admit(req) for e in cands):
+                    break  # no engine can take it; retry next round
+                t.state = TaskState.RUNNING
+                t.start_time = now()
+                job = job_by_id[t.job_id]
+                job.stages[t.stage_name].dispatched_tasks += 1
+                job.bump_evidence()  # running/unscheduled sets changed
 
         def view() -> ClusterView:
             prof = None
@@ -177,10 +192,11 @@ class ServingCluster:
             dec = self.scheduler.schedule(active, view())
             res.sched_overhead_s.append(time.perf_counter() - t0)
             dispatch(dec)
-            # decode step on each engine (the real compute)
+            # decode step on each engine (the real compute); paged engines
+            # also need steps to re-admit evicted (requeued) requests
             stepped = False
             for eng in self.engines:
-                if eng.batch_size:
+                if eng.batch_size or getattr(eng, "waiting", ()):
                     eng.step()
                     stepped = True
             if not stepped:
@@ -194,4 +210,5 @@ class ServingCluster:
                 else:
                     time.sleep(1e-3)
         res.makespan = now()
+        res.preemptions = sum(getattr(e, "preemptions", 0) for e in self.engines)
         return res

@@ -43,8 +43,45 @@ class Request:
         return self.finished_at >= 0
 
 
-class LLMEngine:
+class LatencyProfileMixin:
+    """Measured l(b) bookkeeping shared by the slot and paged engines.
+
+    ``_lat_samples`` maps batch size -> per-step latencies; the profile is
+    refit only when new measurements arrived, so the returned object's
+    identity is stable between measurements and schedulers can key
+    calibration caches on it.
+    """
+
+    _lat_samples: Dict[int, List[float]]
+    _profile_memo: Optional[Tuple[Tuple[Tuple[int, int], ...], Optional[LatencyProfile]]]
+
+    def _init_latency(self) -> None:
+        self._lat_samples = {}
+        self._profile_memo = None
+
+    def record_latency(self, batch: int, dt: float) -> None:
+        self._lat_samples.setdefault(batch, []).append(dt)
+
+    def latency_profile(self) -> Optional[LatencyProfile]:
+        """Measured l(b): per-token step latency per batch size (Eq. 2).
+        The first sample per batch size is dropped (JIT warm-up)."""
+        fp = tuple(sorted((b, len(v)) for b, v in self._lat_samples.items()))
+        if self._profile_memo is not None and self._profile_memo[0] == fp:
+            return self._profile_memo[1]
+        samples = {
+            b: (v[1:] if len(v) > 1 else v)
+            for b, v in self._lat_samples.items()
+            if v
+        }
+        prof = measured_profile(samples) if samples else None
+        self._profile_memo = (fp, prof)
+        return prof
+
+
+class LLMEngine(LatencyProfileMixin):
     """One LLM executor with continuous batching over static slots."""
+
+    preemptions = 0  # slot engines never evict (interface parity)
 
     def __init__(
         self,
@@ -66,12 +103,7 @@ class LLMEngine:
         self.active: Dict[int, Request] = {}      # slot -> request
         self.free_slots = list(range(max_batch))
         self._tokens = np.zeros((max_batch,), np.int32)
-        self._lat_samples: Dict[int, List[float]] = {}
-        # latency-profile memo: (sample-count fingerprint, profile).  The
-        # profile object's identity is stable between new measurements, so
-        # schedulers can key calibration caches on it instead of refitting
-        # l(b) on every scheduling round.
-        self._profile_memo: Optional[Tuple[Tuple[Tuple[int, int], ...], Optional[LatencyProfile]]] = None
+        self._init_latency()
 
         self._decode = jax.jit(
             lambda p, c, t: decode_step(p, cfg, c, t)
@@ -163,8 +195,7 @@ class LLMEngine:
             self.params, self.cache, jnp.asarray(self._tokens)
         )
         logits = np.asarray(jax.device_get(logits))
-        dt = time.perf_counter() - t0
-        self._lat_samples.setdefault(b, []).append(dt / max(1, b) * b)  # per step
+        self.record_latency(b, time.perf_counter() - t0)
 
         finished = []
         for slot, req in list(self.active.items()):
@@ -184,24 +215,3 @@ class LLMEngine:
                 if req.on_finish:
                     req.on_finish(req)
         return finished
-
-    # -- calibration ----------------------------------------------------------
-    def latency_profile(self) -> Optional[LatencyProfile]:
-        """Measured l(b): per-token step latency per batch size (Eq. 2).
-        The first sample per batch size is dropped (JIT warm-up).
-
-        Refit only when new measurements arrived since the last call; the
-        returned object is otherwise identical, which lets incremental
-        schedulers reuse calibration-dependent caches across rounds.
-        """
-        fp = tuple(sorted((b, len(v)) for b, v in self._lat_samples.items()))
-        if self._profile_memo is not None and self._profile_memo[0] == fp:
-            return self._profile_memo[1]
-        samples = {
-            b: (v[1:] if len(v) > 1 else v)
-            for b, v in self._lat_samples.items()
-            if v
-        }
-        prof = measured_profile(samples) if samples else None
-        self._profile_memo = (fp, prof)
-        return prof

@@ -1,0 +1,96 @@
+"""Block-table page allocator for the paged KV cache.
+
+Pages are position-independent fixed-size chunks of KV storage; the
+allocator hands out physical page ids and enforces the two invariants
+the engine's correctness rests on:
+
+- a page is owned by at most one request at a time (no aliasing);
+- every alloc is balanced by exactly one free (no leaks, no double
+  frees) — violations raise immediately instead of corrupting caches.
+
+Page 0 is reserved as the *trash page*: padding rows in a decode batch
+point their block tables at it, so their (discarded) writes can never
+land in a live request's pages.
+
+``defrag`` compacts the allocated set onto the lowest physical page ids
+(improving DMA locality after heavy churn) and returns the old→new
+mapping so the engine can permute pools and patch block tables.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+
+TRASH_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` pages of ``page_size`` tokens."""
+
+    def __init__(self, num_pages: int, page_size: int) -> None:
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))  # pop() -> low ids first
+        self._owner: Dict[int, int] = {}  # page id -> owner tag (request id)
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._owner)
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(0, n_tokens) // self.page_size)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    # -- alloc/free ----------------------------------------------------------
+    def alloc(self, n: int, owner: int = -1) -> Optional[List[int]]:
+        """Atomically allocate ``n`` pages; None if the pool can't satisfy."""
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        return pages
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(
+                    f"double free / foreign page {p} (owners: {self._owner})"
+                )
+            del self._owner[p]
+            self._free.append(p)
+
+    def owned_by(self, owner: int) -> List[int]:
+        return sorted(p for p, o in self._owner.items() if o == owner)
+
+    def check_no_leaks(self) -> None:
+        """All pages free (call when the engine is idle)."""
+        if self._owner:
+            raise AssertionError(f"leaked pages: {sorted(self._owner)}")
+        assert len(self._free) == self.num_pages - 1
+
+    # -- defrag --------------------------------------------------------------
+    def defrag(self) -> Dict[int, int]:
+        """Compact allocated pages onto the lowest ids; returns {old: new}.
+
+        The caller must apply the mapping to both the physical pools
+        (permute page rows) and every live block table before the next
+        kernel call.
+        """
+        live = sorted(self._owner)
+        mapping = {old: new for new, old in enumerate(live, start=1)}
+        self._owner = {mapping[p]: o for p, o in self._owner.items()}
+        self._free = list(
+            range(self.num_pages - 1, len(live), -1)
+        )
+        return {o: n for o, n in mapping.items() if o != n}

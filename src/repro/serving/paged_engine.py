@@ -1,0 +1,345 @@
+"""Paged KV-cache continuous-batching engine (the vLLM-style executor).
+
+Replaces the slot engine's ``max_batch`` pre-allocated dense caches with
+a pooled page store + per-request block tables:
+
+- **admission** is capacity-based: a request is admitted when a sequence
+  row is free AND the page pool can hold its prompt plus one decode
+  token — not when a whole ``max_len`` slot is free, so the realistic
+  concurrency is bounded by *actual* KV usage, not worst-case reservation;
+- **chunked prefill**: prompts are processed ``prefill_chunk`` tokens per
+  engine step, interleaved with decode, so a long prompt never stalls
+  every running decode stream;
+- **decode** batches all running rows each step (padded to a power-of-two
+  bucket so JIT shapes stay stable; padding rows write to the reserved
+  trash page) through the Pallas paged-attention kernel;
+- **preemption-by-eviction**: when decode needs a fresh page and the pool
+  is dry, the youngest request is evicted — its pages freed, its request
+  requeued for recompute-style restart — so older requests always run to
+  completion (no livelock, matching vLLM's LIFO recompute policy);
+- the measured per-batch-size step latency keeps feeding the Eq. 2
+  batching-aware calibration profile exactly like the slot engine.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import init_params
+from ..models.config import ModelConfig
+from ..models.paged import (
+    init_paged_pools,
+    paged_decode_step,
+    paged_prefill_chunk,
+    supports_paged,
+)
+from .engine import LatencyProfileMixin, Request
+from .paged_cache import PageAllocator, TRASH_PAGE
+
+
+def _bucket(b: int, cap: int) -> int:
+    """Smallest power of two >= b (capped): stable JIT decode shapes."""
+    out = 1
+    while out < b:
+        out *= 2
+    return min(out, cap)
+
+
+class PagedLLMEngine(LatencyProfileMixin):
+    """One LLM executor with continuous batching over paged KV."""
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        max_seqs: int = 32,
+        max_len: int = 256,
+        page_size: int = 16,
+        num_pages: Optional[int] = None,
+        seed: int = 0,
+        params: Optional[Any] = None,
+        greedy: bool = True,
+        prefill_chunk: int = 64,
+    ) -> None:
+        if not supports_paged(cfg):
+            raise ValueError(
+                f"config {cfg.name!r} is not paged-KV compatible; "
+                "use the slot LLMEngine"
+            )
+        self.cfg = cfg
+        self.max_seqs = max_seqs
+        self.max_len = max_len
+        self.page_size = page_size
+        self.pages_per_seq = -(-max_len // page_size)
+        if num_pages is None:
+            num_pages = 1 + max_seqs * self.pages_per_seq  # no oversubscription
+        if num_pages - 1 < self.pages_per_seq:
+            raise ValueError(
+                "page pool smaller than one max_len sequence: "
+                f"{num_pages - 1} < {self.pages_per_seq} pages"
+            )
+        self.num_pages = num_pages
+        self.greedy = greedy
+        self.prefill_chunk = prefill_chunk
+        key = jax.random.key(seed)
+        self.params = params if params is not None else init_params(cfg, key)[0]
+
+        self.allocator = PageAllocator(num_pages, page_size)
+        self.pools = init_paged_pools(cfg, num_pages, page_size)
+        self.block_tables = np.full(
+            (max_seqs, self.pages_per_seq), TRASH_PAGE, np.int32
+        )
+        self.lengths = np.zeros((max_seqs,), np.int64)
+        self._tokens = np.zeros((max_seqs,), np.int32)
+        self.seq_pages: Dict[int, List[int]] = {}
+        self.free_rows: List[int] = list(range(max_seqs))
+        self.active: Dict[int, Request] = {}       # row -> decoding request
+        self.prefilling: Dict[int, Tuple[Request, int]] = {}  # row -> (req, pos)
+        self.waiting: Deque[Request] = deque()     # evicted, awaiting re-admit
+        self.preemptions = 0
+        self._admit_seq = 0
+        self._row_seq: Dict[int, int] = {}
+        self._init_latency()
+
+        # donate the pools so each step updates KV in place instead of
+        # copying the whole pool (CPU ignores donation and would warn)
+        self._donate = (1,) if jax.default_backend() != "cpu" else ()
+        self._decode = jax.jit(
+            lambda p, pools, toks, bt, lens: paged_decode_step(
+                p, cfg, pools, toks, bt, lens
+            ),
+            donate_argnums=self._donate,
+        )
+        self._prefill_cache: Dict[int, Callable] = {}
+
+    # -- admission ----------------------------------------------------------
+    @property
+    def batch_size(self) -> int:
+        return len(self.active) + len(self.prefilling)
+
+    @property
+    def max_batch(self) -> int:
+        return self.max_seqs
+
+    @property
+    def free_token_capacity(self) -> int:
+        """Tokens of KV the pool can still hold (drives placement)."""
+        return self.allocator.free_pages * self.page_size
+
+    def can_admit(self) -> bool:
+        return (
+            not self.waiting
+            and bool(self.free_rows)
+            and self.allocator.can_alloc(1)
+        )
+
+    def admit(self, req: Request) -> bool:
+        """Capacity-based admission: refuse when the page pool is exhausted."""
+        if self.waiting:  # evicted requests re-enter first
+            return False
+        return self._place(req)
+
+    def _place(self, req: Request) -> bool:
+        plen = len(req.prompt)
+        if plen + 1 > self.pages_per_seq * self.page_size:
+            raise ValueError(f"prompt of {plen} tokens exceeds max_len")
+        need = self.allocator.pages_for(plen + 1)
+        if not self.free_rows or not self.allocator.can_alloc(need):
+            return False
+        row = self.free_rows.pop(0)
+        pages = self.allocator.alloc(need, owner=row)
+        assert pages is not None
+        self.seq_pages[row] = pages
+        self.block_tables[row] = TRASH_PAGE
+        self.block_tables[row, : len(pages)] = pages
+        self.lengths[row] = 0
+        self.prefilling[row] = (req, 0)
+        self._admit_seq += 1
+        self._row_seq[row] = self._admit_seq
+        return True
+
+    # -- eviction -----------------------------------------------------------
+    def _evict_row(self, row: int) -> None:
+        req = self.active.pop(row, None)
+        if req is None:
+            req, _ = self.prefilling.pop(row)
+        # recompute-style restart: generated tokens are discarded
+        req.out_tokens.clear()
+        req.started_at = -1.0
+        self.waiting.appendleft(req)
+        self._release_row(row)
+        self.preemptions += 1
+
+    def _evict_for(self, row: int) -> bool:
+        """Make room for ``row``: evict the youngest row *younger than*
+        ``row``; if none exists, ``row`` itself is evicted (it is the
+        youngest).  Strict age order means the oldest request always
+        makes progress — mutual-eviction livelock is impossible.
+        Returns False when ``row`` itself was evicted."""
+        younger = [
+            r for r in self._row_seq
+            if r != row and self._row_seq[r] > self._row_seq[row]
+        ]
+        victim = max(younger, key=lambda r: self._row_seq[r]) if younger else row
+        self._evict_row(victim)
+        return victim != row
+
+    def _release_row(self, row: int) -> None:
+        self.allocator.free(self.seq_pages.pop(row))
+        self.block_tables[row] = TRASH_PAGE
+        self.lengths[row] = 0
+        del self._row_seq[row]
+        self.free_rows.append(row)
+
+    def _grow(self, row: int) -> bool:
+        """Ensure the page holding position ``lengths[row]`` exists.
+        Returns False when ``row`` itself had to be evicted (it was the
+        youngest and the pool is dry); a lone row can always grow
+        because the pool holds at least one full max_len sequence."""
+        pi = int(self.lengths[row]) // self.page_size
+        while pi >= len(self.seq_pages[row]):
+            pages = self.allocator.alloc(1, owner=row)
+            if pages is None:
+                if not self._evict_for(row):
+                    return False
+                continue
+            self.seq_pages[row].append(pages[0])
+            self.block_tables[row, len(self.seq_pages[row]) - 1] = pages[0]
+        return True
+
+    # -- prefill ------------------------------------------------------------
+    def _prefill_fn(self, past: int) -> Callable:
+        fn = self._prefill_cache.get(past)
+        if fn is None:
+            fn = jax.jit(
+                lambda p, pools, toks, bt: paged_prefill_chunk(
+                    p, self.cfg, pools, toks, bt, past
+                ),
+                donate_argnums=self._donate,
+            )
+            self._prefill_cache[past] = fn
+        return fn
+
+    def _run_prefill(self, budget: int) -> None:
+        """Advance prompt processing by up to ``budget`` tokens.
+
+        A row's chunk is never truncated by leftover budget — chunks are
+        either full ``prefill_chunk`` or a prompt's final remainder, so
+        ``past`` offsets stay multiples of ``prefill_chunk`` and the jit
+        specializations stay bounded (per chunk index + per distinct
+        final-remainder length) instead of one per arbitrary offset.
+        """
+        for row in sorted(self.prefilling, key=lambda r: self._row_seq[r]):
+            if budget <= 0:
+                break
+            req, pos = self.prefilling[row]
+            plen = len(req.prompt)
+            chunk = min(self.prefill_chunk, plen - pos)
+            if chunk > budget:
+                break
+            toks = jnp.asarray([req.prompt[pos : pos + chunk]], jnp.int32)
+            bt = jnp.asarray(self.block_tables[row], jnp.int32)
+            logits, self.pools = self._prefill_fn(pos)(
+                self.params, self.pools, toks, bt
+            )
+            pos += chunk
+            budget -= chunk
+            if pos == plen:
+                first = int(jnp.argmax(logits[0, -1]))
+                req.out_tokens.append(first)
+                req.started_at = time.perf_counter()
+                self._tokens[row] = first
+                self.lengths[row] = plen
+                del self.prefilling[row]
+                self.active[row] = req
+            else:
+                self.prefilling[row] = (req, pos)
+
+    # -- decode loop --------------------------------------------------------
+    def step(self) -> List[Request]:
+        """One engine iteration: admit ← waiting, prefill a chunk, decode
+        one token for every running request.  Returns finished requests."""
+        while self.waiting and self.free_rows:
+            req = self.waiting[0]
+            if not self._place(req):
+                break
+            self.waiting.popleft()
+        if self.prefilling:
+            self._run_prefill(self.prefill_chunk)
+        if not self.active:
+            return []
+
+        # page growth (may evict); iterate oldest-first so eviction of a
+        # younger row cannot starve an older one
+        for row in sorted(self.active, key=lambda r: self._row_seq[r]):
+            if row in self.active:  # may have been evicted by a prior grow
+                self._grow(row)
+        if not self.active:
+            return []
+
+        rows = sorted(self.active, key=lambda r: self._row_seq[r])
+        b = len(rows)
+        bucket = _bucket(b, self.max_seqs)
+        idx = rows + [rows[0]] * (bucket - b)   # pad shape; padding masked below
+        toks = np.asarray(self._tokens[idx], np.int32)
+        bt = np.asarray(self.block_tables[idx], np.int32)
+        lens = np.asarray(self.lengths[idx], np.int32)
+        # padding rows: length 0, trash block table — writes land in page 0
+        if bucket > b:
+            toks[b:] = 0
+            bt[b:] = TRASH_PAGE
+            lens[b:] = 0
+
+        t0 = time.perf_counter()
+        logits, self.pools = self._decode(
+            self.params, self.pools, jnp.asarray(toks), jnp.asarray(bt),
+            jnp.asarray(lens),
+        )
+        logits = np.asarray(jax.device_get(logits))
+        self.record_latency(b, time.perf_counter() - t0)
+
+        finished: List[Request] = []
+        for i, row in enumerate(rows):
+            req = self.active[row]
+            nxt = int(np.argmax(logits[i]))
+            req.out_tokens.append(nxt)
+            self._tokens[row] = nxt
+            self.lengths[row] += 1
+            limit = (
+                len(req.out_tokens) >= req.max_new_tokens
+                or (req.stop_token is not None and nxt == req.stop_token)
+                or int(self.lengths[row]) >= self.max_len - 2
+            )
+            if limit:
+                req.finished_at = time.perf_counter()
+                finished.append(req)
+                del self.active[row]
+                self._release_row(row)
+                if req.on_finish:
+                    req.on_finish(req)
+        return finished
+
+    # -- maintenance --------------------------------------------------------
+    def defrag(self) -> int:
+        """Compact live pages onto low ids; returns #pages moved."""
+        mapping = self.allocator.defrag()
+        if not mapping:
+            return 0
+        perm = np.arange(self.num_pages)
+        for old, new in mapping.items():
+            perm[new] = old
+        perm_j = jnp.asarray(perm)
+        self.pools = jax.tree.map(
+            lambda pool: pool[:, perm_j], self.pools["blocks"], is_leaf=None
+        )
+        self.pools = {"blocks": self.pools}
+        for row, pages in self.seq_pages.items():
+            self.seq_pages[row] = [mapping.get(p, p) for p in pages]
+            self.block_tables[row] = TRASH_PAGE
+            self.block_tables[row, : len(self.seq_pages[row])] = self.seq_pages[row]
+        return len(mapping)

@@ -56,6 +56,7 @@ class RunningLLMTask:
 @dataclass
 class SimResult:
     jcts: List[float] = field(default_factory=list)
+    jct_by_job: Dict[int, float] = field(default_factory=dict)
     sched_overhead_s: List[float] = field(default_factory=list)
     makespan: float = 0.0
     preemptions: int = 0
@@ -316,6 +317,7 @@ class ClusterSim:
         if job.done():
             job.finish_time = now
             res.jcts.append(job.jct())
+            res.jct_by_job[job.job_id] = job.jct()
             if job in active:
                 active.remove(job)
             self.scheduler.observe_completion(job, now)

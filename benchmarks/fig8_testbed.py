@@ -10,17 +10,33 @@ reserves ``max_len`` tokens per slot up front (concurrency = #slots),
 while the paged engine admits by actual page usage, so the same pool
 serves far more concurrent requests.  Artifact:
 ``benchmarks/out/fig8_paged_vs_slot.json``.
+
+``multi_replica`` serves the same seeded request trace on a fleet of
+equal-budget paged replicas twice — live migration off, then on — and
+records JCT plus migration/preemption counts (pass ``small_pages`` to
+starve replica 0 for the heterogeneous variant).  Artifact:
+``benchmarks/out/fig8_multi_replica.json``.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.fig8_testbed            # everything
+    PYTHONPATH=src python -m benchmarks.fig8_testbed multi_replica
+    PYTHONPATH=src python -m benchmarks.fig8_testbed paged_vs_slot
 """
 
 from __future__ import annotations
 
 import json
+import sys
 import time
 from collections import deque
 from pathlib import Path
 
+import jax
+
 from repro.configs import get_smoke_config
 from repro.core import LLMSched
+from repro.models import init_params
 from repro.serving import LLMEngine, PagedLLMEngine, Request, ServingCluster
 from repro.sim import generate_workload
 
@@ -126,7 +142,140 @@ def paged_vs_slot(
     return out
 
 
-def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11) -> dict:
+def multi_replica(
+    n_replicas: int = 2,
+    n_requests: int = 24,
+    seed: int = 3,
+    max_len: int = 64,
+    page_size: int = 8,
+    pages: int = 17,
+    small_pages: int = None,
+    max_batch: int = 6,
+) -> dict:
+    """Equal-budget replicas, live migration off vs on, same workload.
+
+    The Llumnix scenario: requests are placed least-loaded (blind to
+    future growth), but decode lengths vary 8–56 tokens, so one replica
+    ends up KV-saturated — eviction/recompute churn — while its peer has
+    headroom (its requests happened to finish early).  With migration
+    on, the rebalancer moves the starved replica's youngest request to
+    the peer instead of letting it churn.  All replicas share one set
+    of weights, so the move is token-for-token lossless.  Pass
+    ``small_pages`` to make replica 0 smaller (heterogeneous budgets).
+
+    The fleet is driven step-deterministically (one decode iteration per
+    tick for every replica) over a seeded request trace, and JCT is
+    measured in *engine steps* — each step costs the same decode compute
+    in both modes, so the comparison is exact and reproducible, not
+    subject to wall-clock jitter.  Wall time is reported as a secondary
+    metric.
+
+    Writes ``benchmarks/out/fig8_multi_replica.json`` with per-mode
+    avg/p95 JCT (steps), migration/preemption counts, and the JCT delta.
+    """
+    import numpy as np
+
+    from repro.serving import Rebalancer
+
+    cfg = get_smoke_config("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))[0]
+    rng = np.random.default_rng(seed)
+    dec_lens = rng.integers(8, 56, n_requests).tolist()
+    arrivals = np.sort(rng.integers(0, 20, n_requests)).tolist()
+
+    def build_engines():
+        return [
+            PagedLLMEngine(
+                cfg, max_seqs=max_batch, max_len=max_len,
+                page_size=page_size,
+                num_pages=small_pages if (i == 0 and small_pages) else pages,
+                params=params,
+            )
+            for i in range(n_replicas)
+        ]
+
+    out = {
+        "n_replicas": n_replicas,
+        "n_requests": n_requests,
+        "seed": seed,
+        "page_size": page_size,
+        "pages_per_replica": pages,
+        "small_pages": small_pages,
+        "model": cfg.name,
+    }
+    rows = []
+    for mode, migrate in (("no_migration", False), ("migration", True)):
+        engines = build_engines()
+        rb = Rebalancer(engines) if migrate else None
+        cur_step = [0]
+        finish_step = {}
+
+        def _done(req, _fs=finish_step, _cs=cur_step):
+            _fs[req.rid] = _cs[0]
+
+        pending = deque(
+            (arrivals[i],
+             Request(rid=i, prompt=[1 + i % 7, 2, 3],
+                     max_new_tokens=dec_lens[i], on_finish=_done))
+            for i in range(n_requests)
+        )
+        t0 = time.perf_counter()
+        while pending or any(
+            e.batch_size or e.waiting for e in engines
+        ):
+            # admit due arrivals least-loaded (same policy both modes —
+            # blind to future KV growth, as real admission must be)
+            while pending and pending[0][0] <= cur_step[0]:
+                _, req = pending[0]
+                cands = sorted(
+                    (e for e in engines if e.can_admit()),
+                    key=lambda e: (e.batch_size, -e.free_token_capacity),
+                )
+                if not any(e.admit(req) for e in cands):
+                    break  # no capacity this tick; retry next
+                pending.popleft()
+            if rb is not None:
+                rb.step()
+            for e in engines:
+                if e.batch_size or e.waiting:
+                    e.step()
+            cur_step[0] += 1
+        wall = time.perf_counter() - t0
+        jcts = [finish_step[i] - arrivals[i] for i in range(n_requests)]
+        out[mode] = {
+            "avg_jct_steps": round(float(np.mean(jcts)), 2),
+            "p95_jct_steps": round(float(np.percentile(jcts, 95)), 2),
+            "makespan_steps": cur_step[0],
+            "wall_s": round(wall, 3),
+            "preemptions": sum(e.preemptions for e in engines),
+            "migrations": rb.migrations if rb else 0,
+        }
+        rows.append([mode, out[mode]["avg_jct_steps"],
+                     out[mode]["p95_jct_steps"], out[mode]["makespan_steps"],
+                     out[mode]["preemptions"], out[mode]["migrations"]])
+    out["jct_delta_pct"] = round(
+        100.0
+        * (out["no_migration"]["avg_jct_steps"]
+           - out["migration"]["avg_jct_steps"])
+        / max(out["no_migration"]["avg_jct_steps"], 1e-9),
+        1,
+    )
+    emit_csv(
+        f"fig8_multi_replica ({n_replicas} replicas, live migration "
+        "off/on; same seeded trace; JCT in engine steps)",
+        ["mode", "avg_jct_steps", "p95_jct_steps", "makespan_steps",
+         "preemptions", "migrations"],
+        rows,
+    )
+    print(f"# migration JCT reduction: {out['jct_delta_pct']}%\n")
+    OUT_DIR.mkdir(exist_ok=True)
+    with open(OUT_DIR / "fig8_multi_replica.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11,
+         include_artifacts: bool = True) -> dict:
     t0 = time.time()
     cfg = get_smoke_config("stablelm_1_6b")
     rows = []
@@ -153,10 +302,25 @@ def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11) -> dict:
          "sched_overhead_ms"],
         rows,
     )
-    results["paged_vs_slot"] = paged_vs_slot()
+    if include_artifacts:
+        results["paged_vs_slot"] = paged_vs_slot()
+        results["multi_replica"] = multi_replica()
     print(f"# fig8 wall time: {time.time()-t0:.0f}s\n")
     return results
 
 
 if __name__ == "__main__":
-    main()
+    mode = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if mode == "multi_replica":
+        multi_replica()
+    elif mode == "paged_vs_slot":
+        paged_vs_slot()
+    elif mode == "schedulers":
+        main(include_artifacts=False)
+    elif mode == "all":
+        main()
+    else:
+        raise SystemExit(
+            f"unknown mode {mode!r}; use all | schedulers | "
+            "paged_vs_slot | multi_replica"
+        )

@@ -1,5 +1,6 @@
 """Fig. 9 — sensitivity: exploration probability ε, task sampling ratio r,
-job arrival rate λ (normalized average JCT)."""
+job arrival rate λ, and replica count × live migration (normalized
+average JCT)."""
 
 from __future__ import annotations
 
@@ -58,6 +59,28 @@ def main(mix_eps: str = "mixed", n_jobs: int = 80) -> dict:
             base = base or jct
             results[("lambda", mix, lam)] = jct
             rows.append([f"lambda({mix})", lam, round(jct, 2),
+                         round(jct / base, 3)])
+
+    # (d) replica count × live migration: fixed total LLM slots split
+    # over 1/2/4 KV-budgeted replicas (the multi-replica tentpole knob).
+    # More, smaller replicas fragment the KV pool — migration recovers
+    # most of the loss by moving requests off saturated replicas.
+    st = store_for(mix_eps)
+    base = None
+    for n, mb, kv in ((1, 16, 12000), (2, 8, 6000), (4, 4, 3000)):
+        for mig in ((False,) if n == 1 else (False, True)):
+            js = [
+                simulate(LLMSched(st, epsilon=0.2, seed=0), mix=mix_eps,
+                         n_jobs=n_jobs, seed=s, n_regular=4, n_llm=n,
+                         max_batch=mb, kv_budget_tokens=kv,
+                         migrate=mig).avg_jct
+                for s in SEEDS[:2]
+            ]
+            jct = float(np.mean(js))
+            base = base or jct
+            label = f"{n}x{mb}" + ("+migrate" if mig else "")
+            results[("replicas", label)] = jct
+            rows.append(["replicas", label, round(jct, 2),
                          round(jct / base, 3)])
 
     emit_csv(

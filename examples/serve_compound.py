@@ -5,44 +5,91 @@ stablelm-family model) serves compound LLM jobs whose admission order is
 decided by LLMSched; compare against FCFS on the same workload, with
 both the slot-based and the paged KV-cache engine.
 
-Run:  PYTHONPATH=src python examples/serve_compound.py
+Multi-replica mode: ``--replicas N`` spins up N paged engines sharing
+one set of weights (replica 0 gets a deliberately small page pool so KV
+pressure is visible), and ``--migrate`` turns on Llumnix-style live
+migration — watch the ``migrations`` counter replace ``preemptions``.
+
+Run:
+  PYTHONPATH=src python examples/serve_compound.py
+  PYTHONPATH=src python examples/serve_compound.py --replicas 2 --migrate
 """
+
+import argparse
+
+import jax
 
 from repro.configs import get_smoke_config
 from repro.core import FCFS, LLMSched, ProfileStore
+from repro.models import init_params
 from repro.serving import LLMEngine, PagedLLMEngine, ServingCluster
 from repro.sim import generate_traces, generate_workload, get_generators
 
 
-def run_one(name: str, sched, wl, cfg, engine: str = "slot"):
+def build_engines(cfg, engine: str, replicas: int, seed: int = 0):
+    """Build the fleet; multi-replica fleets share weights (migratable)."""
     if engine == "paged":
-        engines = [PagedLLMEngine(cfg, max_seqs=8, max_len=96,
-                                  page_size=16, seed=0)]
-    else:
-        engines = [LLMEngine(cfg, max_batch=4, max_len=96, seed=0)]
+        params = init_params(cfg, jax.random.key(seed))[0]
+        # replica 0 slightly starved when there are peers to flee to
+        return [
+            PagedLLMEngine(cfg, max_seqs=8, max_len=96, page_size=16,
+                           num_pages=(13 if (i == 0 and replicas > 1)
+                                      else None),
+                           params=params)
+            for i in range(replicas)
+        ]
+    return [LLMEngine(cfg, max_batch=4, max_len=96, seed=seed + i)
+            for i in range(replicas)]
+
+
+def run_one(name, sched, wl, cfg, engine="slot", replicas=1, migrate=False):
+    engines = build_engines(cfg, engine, replicas)
     cluster = ServingCluster(sched, engines, n_regular=4,
-                            token_scale=24.0, time_scale=24.0)
+                             token_scale=24.0, time_scale=24.0,
+                             migrate=migrate)
     res = cluster.run(wl)
-    print(f"{name:10s} engine={engine:5s} avg_jct={res.avg_jct:6.2f}s "
-          f"jobs={len(res.jcts)} tokens={res.tokens_generated} "
+    print(f"{name:10s} engine={engine:5s} replicas={replicas} "
+          f"avg_jct={res.avg_jct:6.2f}s jobs={len(res.jcts)} "
+          f"tokens={res.tokens_generated} "
           f"sched_overhead={res.avg_overhead_ms:.2f}ms "
-          f"preemptions={res.preemptions}")
+          f"preemptions={res.preemptions} migrations={res.migrations}")
     return res
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="LLM engine replicas (paged, shared weights)")
+    ap.add_argument("--migrate", action="store_true",
+                    help="live-migrate KV off starved replicas")
+    ap.add_argument("--jobs", type=int, default=12)
+    args = ap.parse_args()
+
     gens = get_generators()
     apps = [g.template for g in gens.values()]
     store = ProfileStore().fit(apps, generate_traces("planning", 300, seed=7))
     cfg = get_smoke_config("stablelm_1_6b")
     print(f"engine model: {cfg.name} ({cfg.n_layers}L d={cfg.d_model})")
 
+    if args.replicas > 1:
+        # multi-replica paged fleet: llmsched vs fcfs, migration per flag
+        for name, sched in [
+            ("llmsched", LLMSched(store, epsilon=0.2, seed=0)),
+            ("fcfs", FCFS()),
+        ]:
+            wl = generate_workload("planning", args.jobs, arrival_rate=0.9,
+                                   seed=11)
+            run_one(name, sched, wl, cfg, engine="paged",
+                    replicas=args.replicas, migrate=args.migrate)
+        return
+
     for engine in ("slot", "paged"):
         for name, sched in [
             ("llmsched", LLMSched(store, epsilon=0.2, seed=0)),
             ("fcfs", FCFS()),
         ]:
-            wl = generate_workload("planning", 12, arrival_rate=0.9, seed=11)
+            wl = generate_workload("planning", args.jobs, arrival_rate=0.9,
+                                   seed=11)
             run_one(name, sched, wl, cfg, engine=engine)
 
 

@@ -6,6 +6,14 @@ and the real serving runtime (`repro.serving`): both call
 :class:`ClusterView`, and dispatch tasks greedily from the returned
 preference lists (``T_r`` for regular executors, ``T_l`` for LLM
 executors) onto free capacity.
+
+Since the multi-replica PR, :class:`ClusterView` additionally carries
+per-replica KV headroom (``llm_free_tokens``) and :class:`Decision`
+carries a *placement* map assigning each LLM task to a specific engine
+replica.  :class:`LLMSched` fills the map with an uncertainty- and
+fragmentation-aware score (high-entropy jobs land where KV headroom is
+largest); runtimes that ignore the map — and schedulers that never fill
+it — keep the historical least-loaded behaviour.
 """
 
 from __future__ import annotations
@@ -20,25 +28,88 @@ from .calibration import LatencyProfile
 from .dag import Job, Stage, StageType, Task
 from .profiler import ProfileStore
 
+# Key type of Decision.placement: (job_id, stage_name, task index).
+TaskKey = Tuple[int, str, int]
+
+
+def task_key(task: Task) -> TaskKey:
+    """Return the stable identity of ``task`` used by placement maps.
+
+    Parameters
+    ----------
+    task : Task
+        Any runtime task.
+
+    Returns
+    -------
+    tuple of (int, str, int)
+        ``(job_id, stage_name, index)`` — unique within a workload and
+        stable across scheduling rounds (unlike ``id(task)``).
+    """
+    return (task.job_id, task.stage_name, task.index)
+
 
 @dataclass
 class ClusterView:
-    """What the scheduler may observe about the cluster."""
+    """What the scheduler may observe about the cluster.
+
+    Attributes
+    ----------
+    now : float
+        Current (simulated or wall-clock) time in seconds.
+    free_regular : int
+        Number of idle regular-executor slots.
+    llm_loads : list of (int, int)
+        Per-LLM-replica ``(running batch size, max batch size)``.
+    latency_profile : LatencyProfile, optional
+        Measured ``l(b)`` per-token decode latency, for Eq. 2 batching
+        calibration.  ``None`` before any measurement exists.
+    llm_free_tokens : list of int, optional
+        Per-LLM-replica free KV capacity in *tokens* (free pages ×
+        page size for paged engines).  ``None`` when the runtime has no
+        paged KV accounting (e.g. the simulator or the slot engine);
+        placement then falls back to pure load balancing.
+    """
 
     now: float
     free_regular: int
     # per-LLM-executor (running batch size, max batch size)
     llm_loads: List[Tuple[int, int]]
     latency_profile: Optional[LatencyProfile] = None
+    # per-LLM-executor free KV capacity in tokens (None: not paged)
+    llm_free_tokens: Optional[List[int]] = None
 
     def llm_free_slots(self) -> int:
+        """Return the total number of free batch slots across replicas.
+
+        Returns
+        -------
+        int
+            Sum over replicas of ``max_batch - batch``.
+        """
         return sum(max(0, mb - b) for b, mb in self.llm_loads)
 
     def current_batch(self) -> int:
+        """Return the largest running batch size across replicas.
+
+        Returns
+        -------
+        int
+            ``max(batch)`` over replicas, 0 when there are none.
+        """
         return max((b for b, _ in self.llm_loads), default=0)
 
     def target_batch(self) -> int:
-        """Batch size an incoming task is likely to run at (for Eq. 2)."""
+        """Return the batch size an incoming task is likely to run at.
+
+        Used as ``b_t`` in the paper's Eq. 2 batching-aware latency
+        calibration: the least-loaded replica's batch plus one.
+
+        Returns
+        -------
+        int
+            Expected batch size for the next admitted task (≥ 1).
+        """
         if not self.llm_loads:
             return 1
         b, mb = min(self.llm_loads, key=lambda t: t[0])
@@ -47,20 +118,88 @@ class ClusterView:
 
 @dataclass
 class Decision:
-    """Ordered scheduling preference lists (Algorithm 1 output)."""
+    """Ordered scheduling preference lists (Algorithm 1 output).
+
+    Attributes
+    ----------
+    regular : list of Task
+        Tasks for regular executors, most-preferred first.
+    llm : list of Task
+        Tasks for LLM executors, most-preferred first.
+    placement : dict
+        Optional map from :func:`task_key` to a replica index in
+        ``ClusterView.llm_loads``.  Runtimes treat it as a *hint*: a
+        task whose placed replica cannot admit it falls back to the
+        least-loaded admissible replica.  Schedulers that never call
+        :meth:`place` leave it empty (historical behaviour).
+    """
 
     regular: List[Task] = field(default_factory=list)
     llm: List[Task] = field(default_factory=list)
+    placement: Dict[TaskKey, int] = field(default_factory=dict)
+
+    def place(self, task: Task, replica: int) -> None:
+        """Record that ``task`` should run on LLM replica ``replica``.
+
+        Parameters
+        ----------
+        task : Task
+            An LLM task present in :attr:`llm`.
+        replica : int
+            Index into ``ClusterView.llm_loads``.
+        """
+        self.placement[task_key(task)] = replica
+
+    def replica_for(self, task: Task) -> Optional[int]:
+        """Return the placed replica index for ``task``.
+
+        Parameters
+        ----------
+        task : Task
+            The task being dispatched.
+
+        Returns
+        -------
+        int or None
+            The replica hint, or ``None`` when the scheduler did not
+            place this task (caller should use its own fallback).
+        """
+        return self.placement.get(task_key(task))
 
 
 class Scheduler:
+    """Abstract scheduler interface shared by the sim and the testbed."""
+
     name = "base"
 
     def schedule(self, jobs: Sequence[Job], view: ClusterView) -> Decision:
+        """Produce ordered dispatch preference lists for one round.
+
+        Parameters
+        ----------
+        jobs : sequence of Job
+            All unfinished jobs currently known to the runtime.
+        view : ClusterView
+            Observable cluster state at this scheduling instant.
+
+        Returns
+        -------
+        Decision
+            Preference-ordered task lists (and optional placement).
+        """
         raise NotImplementedError
 
     # Hook for schedulers that learn online (Decima).
     def observe_completion(self, job: Job, now: float) -> None:  # pragma: no cover
+        """Notify the scheduler that ``job`` finished at time ``now``.
+
+        Parameters
+        ----------
+        job : Job
+            The job that just completed.
+        now : float
+            Completion time in runtime seconds.
+        """
         pass
 
 
@@ -78,9 +217,45 @@ class LLMSched(Scheduler):
     the runtime reported events for (stage completion, dispatch, reveal).
     Emits decisions identical to ``incremental=False``; the flag only
     moves work out of the per-round hot path.
+
+    Multi-replica placement: after building the preference lists, each
+    LLM task is assigned a replica with the score
+
+    ``score(e) = w_u · kv_headroom(e) − (1 − w_u) · load(e)``
+
+    where ``w_u = 0.25 + 0.5·u`` and ``u ∈ [0, 1]`` is the job's
+    normalized duration-bound width (entropy proxy).  Certain jobs
+    (``u → 0``) weight the load term — they bin-pack tightly for low
+    decode latency; uncertain jobs (``u → 1``) weight KV headroom —
+    their unpredictable expansion needs room to grow without triggering
+    eviction.  When the view has no KV accounting
+    (``llm_free_tokens is None``), placement degenerates to exact
+    least-loaded-by-absolute-batch (lowest index on ties) — including
+    heterogeneous ``max_batch`` fleets — preserving the historical
+    dispatcher behaviour byte-for-byte.
+
+    Parameters
+    ----------
+    profiles : ProfileStore
+        Fitted per-application BN profiles (duration + structure).
+    epsilon : float, optional
+        Exploration probability of Algorithm 1's ε-greedy merge.
+    sampling_ratio : float, optional
+        Fraction of an explored stage's tasks dispatched immediately.
+    use_bn : bool, optional
+        Use Bayesian-network posteriors (``False``: historical means).
+    seed : int, optional
+        Seed of the exploration RNG.
+    incremental : bool, optional
+        Enable cross-round caching keyed by ``Job.evidence_version``.
     """
 
     name = "llmsched"
+
+    #: Tokens of KV headroom assumed consumed by one placed-but-not-yet-
+    #: running LLM task (the scheduler cannot see true output lengths,
+    #: which are ground truth hidden until completion).
+    kv_reserve_tokens = 64
 
     def __init__(
         self,
@@ -151,6 +326,22 @@ class LLMSched(Scheduler):
         return (self._calib_epoch, view.target_batch())
 
     def est_rd(self, job: Job, view: ClusterView) -> float:
+        """Estimate ``job``'s remaining duration (SRTF key).
+
+        Parameters
+        ----------
+        job : Job
+            The job to estimate.
+        view : ClusterView
+            Cluster state — supplies ``now`` and the batching-aware
+            latency calibration context (Eq. 2).
+
+        Returns
+        -------
+        float
+            Expected remaining seconds; ``inf`` when the application
+            has no fitted profile.
+        """
         p = self.profiles.get(job.app.name)
         if p is None:
             return float("inf")
@@ -188,8 +379,17 @@ class LLMSched(Scheduler):
         """Group jobs whose duration intervals overlap (line 5).
 
         Jobs within a group cannot be ordered with certainty; between
-        groups the ordering is certain.  Groups come back ordered by lower
-        bound.
+        groups the ordering is certain.
+
+        Parameters
+        ----------
+        bounds : list of (float, float, Job)
+            Per-job ``(lower, upper)`` remaining-duration bounds.
+
+        Returns
+        -------
+        list of list of Job
+            Overlap groups, ordered by lower bound.
         """
         if not bounds:
             return []
@@ -221,6 +421,22 @@ class LLMSched(Scheduler):
 
     # -- Algorithm 1 -----------------------------------------------------------
     def schedule(self, jobs: Sequence[Job], view: ClusterView) -> Decision:
+        """Run Algorithm 1 and return placement-annotated preferences.
+
+        Parameters
+        ----------
+        jobs : sequence of Job
+            All unfinished jobs.
+        view : ClusterView
+            Observable cluster state.
+
+        Returns
+        -------
+        Decision
+            SRTF/uncertainty ε-greedy merged task lists; every LLM task
+            additionally carries a replica placement hint (see class
+            docstring for the placement score).
+        """
         self._ur_cache.clear()
         jobs = [j for j in jobs if not j.done()]
         if not jobs:
@@ -266,10 +482,97 @@ class LLMSched(Scheduler):
             s_u.extend(s for _, s in scored)
 
         # lines 11-20: ε-greedy merge
-        return self._merge(s_t, s_u)
+        dec = self._merge(s_t, s_u)
+
+        # multi-replica placement: duration-bound width as the entropy
+        # proxy (same arrays that drove the grouping above)
+        self._place_llm(dec, view, self._job_uncertainty(jobs, los, his))
+        return dec
+
+    @staticmethod
+    def _job_uncertainty(
+        jobs: Sequence[Job], los: np.ndarray, his: np.ndarray
+    ) -> Dict[int, float]:
+        """Normalize duration-bound widths to per-job u ∈ [0, 1]."""
+        widths = his - los
+        finite = widths[np.isfinite(widths)]
+        wmax = float(finite.max()) if finite.size else 0.0
+        out: Dict[int, float] = {}
+        for job, w in zip(jobs, widths):
+            if not math.isfinite(w):
+                out[job.job_id] = 1.0
+            elif wmax <= 0.0:
+                out[job.job_id] = 0.0
+            else:
+                out[job.job_id] = min(1.0, max(0.0, float(w) / wmax))
+        return out
+
+    def _place_llm(
+        self,
+        dec: Decision,
+        view: ClusterView,
+        uncertainty: Dict[int, float],
+    ) -> None:
+        """Assign each LLM task a replica via the uncertainty/KV score.
+
+        Projects batch occupancy and KV headroom forward as tasks are
+        placed, so one round's placements never overcommit a replica.
+        Without ``llm_free_tokens`` the score reduces to least-loaded
+        (lowest index on ties) — identical to the pre-placement
+        dispatchers, keeping seeded single/multi-replica sim
+        trajectories unchanged.
+        """
+        n = len(view.llm_loads)
+        if n == 0 or not dec.llm:
+            return
+        proj_b = [b for b, _ in view.llm_loads]
+        mbs = [mb for _, mb in view.llm_loads]
+        free_tok = (
+            list(view.llm_free_tokens)
+            if view.llm_free_tokens is not None
+            else None
+        )
+        for t in dec.llm:
+            u = uncertainty.get(t.job_id, 0.5)
+            w = 0.25 + 0.5 * u
+            best = None
+            if free_tok is None:
+                # no KV accounting: exact least-loaded by absolute batch
+                # (decode latency is l(b) in the absolute batch size) —
+                # byte-identical to the historical dispatchers, including
+                # heterogeneous max_batch fleets
+                cands = [e for e in range(n) if proj_b[e] < mbs[e]]
+                if cands:
+                    best = min(cands, key=lambda e: (proj_b[e], e))
+            else:
+                best_score = -math.inf
+                for e in range(n):
+                    if mbs[e] <= 0 or proj_b[e] >= mbs[e]:
+                        continue
+                    if free_tok[e] <= 0:
+                        continue  # no KV left: placing guarantees refusal
+                    load = proj_b[e] / mbs[e]
+                    kv = free_tok[e] / max(max(free_tok), 1)
+                    score = w * kv - (1.0 - w) * load
+                    if score > best_score + 1e-12:
+                        best, best_score = e, score
+            if best is None:
+                continue  # every replica projected full; runtime retries
+            dec.place(t, best)
+            proj_b[best] += 1
+            if free_tok is not None:
+                free_tok[best] = max(0, free_tok[best] - self.kv_reserve_tokens)
 
     def observe_completion(self, job: Job, now: float) -> None:
-        """Evict the finished job's slots from the cross-round caches."""
+        """Evict the finished job's slots from the cross-round caches.
+
+        Parameters
+        ----------
+        job : Job
+            The job that just completed.
+        now : float
+            Completion time (unused; interface parity).
+        """
         self._ready_cache.pop(job.job_id, None)
         p = self.profiles.get(job.app.name)
         if p is not None:

@@ -1,32 +1,79 @@
 """Serving launcher: LLMSched-scheduled compound jobs on real engines.
 
-The paper's end-to-end driver: spin up N continuous-batching engines with
-a (smoke) model, train the Bayesian-network profiles from history, then
-run a compound-LLM workload through the uncertainty-aware scheduler and
-report average JCT against a chosen baseline.
+The paper's end-to-end driver: spin up N continuous-batching engine
+replicas with a (smoke) model, train the Bayesian-network profiles from
+history, then run a compound-LLM workload through the uncertainty-aware
+scheduler and report average JCT against a chosen baseline.
+
+Replicas share one set of weights (as same-model replicas do in
+production), which is what makes ``--migrate`` lossless: a decoding
+request's KV pages can be handed to any peer and continue
+token-for-token.  ``--kv-pages`` makes the fleet heterogeneous — e.g.
+``--kv-pages 13,49`` gives replica 0 a small page pool and replica 1 a
+large one, the regime where uncertainty-aware placement and live
+migration earn their keep.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --mix planning --jobs 12 --scheduler llmsched
+  PYTHONPATH=src python -m repro.launch.serve --engine paged \
+      --replicas 2 --kv-pages 13,49 --migrate
 """
 
 from __future__ import annotations
 
 import argparse
 
+import jax
+
 from repro.configs import get_smoke_config
 from repro.core import LLMSched, ProfileStore, make_baselines
+from repro.models import init_params
 from repro.serving import LLMEngine, PagedLLMEngine, ServingCluster
+
 from repro.sim import generate_traces, generate_workload, get_generators
 
 
 def build_scheduler(name: str, store: ProfileStore, epsilon: float, seed: int):
+    """Instantiate LLMSched or a named baseline scheduler."""
     if name == "llmsched":
         return LLMSched(store, epsilon=epsilon, seed=seed)
     return make_baselines(store)[name]
 
 
+def build_engines(args, cfg):
+    """Build the replica fleet: shared weights, optional heterogeneous KV."""
+    n = args.replicas if args.replicas is not None else args.engines
+    if args.engine == "paged":
+        params = init_params(cfg, jax.random.key(args.seed))[0]
+        kv_pages = None
+        if args.kv_pages:
+            kv_pages = [int(x) for x in args.kv_pages.split(",")]
+            if len(kv_pages) != n:
+                raise SystemExit(
+                    f"--kv-pages needs {n} comma-separated values, "
+                    f"got {len(kv_pages)}"
+                )
+        return [
+            PagedLLMEngine(
+                cfg, max_seqs=args.max_batch, max_len=96,
+                page_size=args.page_size,
+                num_pages=kv_pages[i] if kv_pages else None,
+                params=params,
+            )
+            for i in range(n)
+        ]
+    if args.migrate:
+        raise SystemExit("--migrate requires --engine paged")
+    return [
+        LLMEngine(cfg, max_batch=args.max_batch, max_len=96,
+                  seed=args.seed + i)
+        for i in range(n)
+    ]
+
+
 def main(argv=None) -> int:
+    """Entry point for ``python -m repro.launch.serve``."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--mix", default="planning",
@@ -35,9 +82,17 @@ def main(argv=None) -> int:
     ap.add_argument("--scheduler", default="llmsched",
                     choices=["llmsched", "fcfs", "fair", "sjf", "argus",
                              "carbyne", "decima"])
-    ap.add_argument("--engines", type=int, default=1)
+    ap.add_argument("--engines", type=int, default=1,
+                    help="deprecated alias of --replicas")
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="number of LLM engine replicas")
     ap.add_argument("--engine", default="slot", choices=["slot", "paged"],
                     help="slot: dense per-slot KV; paged: block-table pool")
+    ap.add_argument("--migrate", action="store_true",
+                    help="live-migrate KV off starved replicas (paged only)")
+    ap.add_argument("--kv-pages", default=None,
+                    help="comma list of per-replica page-pool sizes "
+                         "(heterogeneous KV budgets), e.g. 13,49")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--regular", type=int, default=4)
@@ -51,30 +106,21 @@ def main(argv=None) -> int:
     store = ProfileStore().fit(apps, generate_traces(args.mix, 300, seed=7))
 
     cfg = get_smoke_config(args.arch)
-    if args.engine == "paged":
-        engines = [
-            PagedLLMEngine(cfg, max_seqs=args.max_batch, max_len=96,
-                           page_size=args.page_size, seed=args.seed + i)
-            for i in range(args.engines)
-        ]
-    else:
-        engines = [
-            LLMEngine(cfg, max_batch=args.max_batch, max_len=96,
-                      seed=args.seed + i)
-            for i in range(args.engines)
-        ]
+    engines = build_engines(args, cfg)
     sched = build_scheduler(args.scheduler, store, args.epsilon, args.seed)
     cluster = ServingCluster(
         sched, engines, n_regular=args.regular,
         token_scale=args.token_scale, time_scale=args.token_scale,
+        migrate=args.migrate,
     )
     wl = generate_workload(args.mix, args.jobs, arrival_rate=0.9, seed=args.seed)
     res = cluster.run(wl)
     print(
-        f"[serve] scheduler={args.scheduler} mix={args.mix} jobs={len(res.jcts)} "
+        f"[serve] scheduler={args.scheduler} mix={args.mix} "
+        f"replicas={len(engines)} jobs={len(res.jcts)} "
         f"avg_jct={res.avg_jct:.2f}s makespan={res.makespan:.1f}s "
         f"tokens={res.tokens_generated} overhead={res.avg_overhead_ms:.2f}ms "
-        f"preemptions={res.preemptions}"
+        f"preemptions={res.preemptions} migrations={res.migrations}"
     )
     return 0
 

@@ -4,14 +4,22 @@ Two interchangeable executors:
 - :class:`LLMEngine` — slot-based (dense per-slot KV, max_batch slots);
 - :class:`PagedLLMEngine` — paged KV pool + block tables (vLLM-style),
   capacity-based admission, chunked prefill, preemption-by-eviction.
+
+Multi-replica serving: :class:`ServingCluster` drives N replicas,
+honouring the scheduler's per-task placement hints, and — when
+``migrate=True`` — runs a :class:`Rebalancer` that live-migrates
+decoding requests (KV pages and all, via :class:`MigrationTicket`) off
+KV-starved replicas onto peers with headroom.
 """
 
 from .engine import LLMEngine, Request
 from .paged_cache import PageAllocator, TRASH_PAGE
-from .paged_engine import PagedLLMEngine
+from .paged_engine import MigrationTicket, PagedLLMEngine
+from .migration import Rebalancer, migrate_request
 from .cluster import ServingCluster, TestbedResult
 
 __all__ = [
     "LLMEngine", "PagedLLMEngine", "Request", "PageAllocator", "TRASH_PAGE",
+    "MigrationTicket", "Rebalancer", "migrate_request",
     "ServingCluster", "TestbedResult",
 ]

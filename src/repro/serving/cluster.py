@@ -9,6 +9,13 @@ LLM tasks become engine requests whose token budget is the task's
 ``out_tokens`` (scaled by ``token_scale`` so CPU runs finish quickly);
 the engines' *measured* l(b) feeds Eq. 2 calibration, closing the same
 loop the paper's vLLM testbed closes.
+
+Multi-replica serving: the cluster exposes per-replica batch load *and*
+KV headroom to the scheduler (``ClusterView.llm_free_tokens``), honours
+the scheduler's per-task placement hints (``Decision.placement``), and
+— with ``migrate=True`` — runs a :class:`~repro.serving.migration.
+Rebalancer` each loop iteration to live-migrate decoding requests off
+KV-starved paged replicas.
 """
 
 from __future__ import annotations
@@ -23,23 +30,52 @@ from ..core.dag import Job, Stage, Task, TaskState
 from ..core.scheduler import ClusterView, Decision, Scheduler
 from ..sim.workloads import GeneratedJob, get_generators, reveal_after_stage
 from .engine import LLMEngine, Request
+from .migration import Rebalancer
 
 
 @dataclass
 class TestbedResult:
+    """Aggregate outcome of one :meth:`ServingCluster.run`.
+
+    Attributes
+    ----------
+    jcts : list of float
+        Per-job completion times (finish − scaled arrival), seconds.
+    jct_by_job : dict
+        ``job_id → JCT`` for cross-run rank comparisons.
+    sched_overhead_s : list of float
+        Wall seconds spent inside ``scheduler.schedule`` per round.
+    makespan : float
+        Total wall seconds from start to last completion.
+    tokens_generated : int
+        Decoded tokens across all engines.
+    preemptions : int
+        Paged-engine evictions (pages freed + recompute requeue).
+    migrations : int
+        Live cross-replica migrations performed by the rebalancer.
+    """
+
     jcts: List[float] = field(default_factory=list)
     jct_by_job: Dict[int, float] = field(default_factory=dict)
     sched_overhead_s: List[float] = field(default_factory=list)
     makespan: float = 0.0
     tokens_generated: int = 0
     preemptions: int = 0  # paged-engine evictions (pages freed + requeue)
+    migrations: int = 0   # live cross-replica KV handoffs
 
     @property
     def avg_jct(self) -> float:
+        """Mean job completion time in seconds (0.0 when empty)."""
         return float(np.mean(self.jcts)) if self.jcts else 0.0
 
     @property
+    def p95_jct(self) -> float:
+        """95th-percentile job completion time in seconds."""
+        return float(np.percentile(self.jcts, 95)) if self.jcts else 0.0
+
+    @property
     def avg_overhead_ms(self) -> float:
+        """Mean scheduler invocation latency in milliseconds."""
         return (
             1e3 * float(np.mean(self.sched_overhead_s))
             if self.sched_overhead_s
@@ -48,6 +84,33 @@ class TestbedResult:
 
 
 class ServingCluster:
+    """Wall-clock event loop over real engines + regular executors.
+
+    Parameters
+    ----------
+    scheduler : Scheduler
+        Admission/placement policy (LLMSched or any baseline).
+    engines : list of LLMEngine or PagedLLMEngine
+        The LLM replica fleet; may mix capacities (heterogeneous KV
+        budgets).  Replicas must share weights for migration to be
+        lossless.
+    n_regular : int, optional
+        Regular executor slots (deadline-completed tasks).
+    token_scale : float, optional
+        Divide task token budgets by this so CPU runs finish quickly.
+    time_scale : float, optional
+        Compress arrival times and regular durations by this factor.
+    min_tokens : int, optional
+        Floor for a scaled LLM task's token budget.
+    migrate : bool, optional
+        Enable the live-migration rebalancer (paged replicas only).
+        Gates every rebalance pass — a supplied ``rebalancer`` is held
+        but never invoked while this is False.
+    rebalancer : Rebalancer, optional
+        Custom policy instance; built with defaults when ``migrate``
+        is set and none is given.
+    """
+
     def __init__(
         self,
         scheduler: Scheduler,
@@ -56,6 +119,8 @@ class ServingCluster:
         token_scale: float = 8.0,
         time_scale: float = 8.0,
         min_tokens: int = 2,
+        migrate: bool = False,
+        rebalancer: Optional[Rebalancer] = None,
     ) -> None:
         self.scheduler = scheduler
         self.engines = engines
@@ -63,8 +128,24 @@ class ServingCluster:
         self.token_scale = token_scale
         self.time_scale = time_scale
         self.min_tokens = min_tokens
+        self.migrate = migrate
+        self.rebalancer = rebalancer
+        if migrate and self.rebalancer is None:
+            self.rebalancer = Rebalancer(engines)
 
     def run(self, workload: Sequence[GeneratedJob]) -> TestbedResult:
+        """Serve a compound-job workload to completion.
+
+        Parameters
+        ----------
+        workload : sequence of GeneratedJob
+            Jobs with arrival times (compressed by ``time_scale``).
+
+        Returns
+        -------
+        TestbedResult
+            JCTs, throughput, preemption and migration counters.
+        """
         gens = get_generators()
         res = TestbedResult()
         t_start = time.perf_counter()
@@ -123,10 +204,11 @@ class ServingCluster:
             for t in dec.llm:
                 if t.state is not TaskState.PENDING:
                     continue
-                # least-loaded admissible engine (paper §IV-D); paged
-                # engines refuse admission when their page pool is
-                # exhausted, so placement is KV-capacity-aware and the
-                # scheduler's dispatch order decides who gets the memory
+                # scheduler placement hint first, then least-loaded
+                # admissible engines (paper §IV-D); paged engines refuse
+                # admission when their page pool is exhausted, so
+                # placement is KV-capacity-aware and the scheduler's
+                # dispatch order decides who gets the memory
                 cands = [e for e in self.engines if e.can_admit()]
                 if not cands:
                     break
@@ -136,6 +218,12 @@ class ServingCluster:
                         -getattr(e, "free_token_capacity", 0),
                     )
                 )
+                placed = dec.replica_for(t)
+                if placed is not None and 0 <= placed < len(self.engines):
+                    pe = self.engines[placed]
+                    if pe in cands:
+                        cands.remove(pe)
+                        cands.insert(0, pe)
                 rid_counter[0] += 1
                 n_tok = max(self.min_tokens, int(t.out_tokens / self.token_scale))
                 prompt = [1 + (hash(t.stage_name) % 32), 2 + t.index % 7]
@@ -167,11 +255,18 @@ class ServingCluster:
             prof = None
             for e in self.engines:
                 prof = e.latency_profile() or prof
+            free_tok = [
+                getattr(e, "free_token_capacity", None) for e in self.engines
+            ]
             return ClusterView(
                 now=now(),
                 free_regular=sum(1 for s in reg_running if s is None),
                 llm_loads=[(e.batch_size, e.max_batch) for e in self.engines],
                 latency_profile=prof,
+                # KV accounting only when every replica reports it
+                llm_free_tokens=(
+                    free_tok if all(f is not None for f in free_tok) else None
+                ),
             )
 
         # ------------------------- main loop -------------------------
@@ -192,6 +287,9 @@ class ServingCluster:
             dec = self.scheduler.schedule(active, view())
             res.sched_overhead_s.append(time.perf_counter() - t0)
             dispatch(dec)
+            # live migration: relieve KV-starved replicas before stepping
+            if self.migrate and self.rebalancer is not None:
+                res.migrations += self.rebalancer.step()
             # decode step on each engine (the real compute); paged engines
             # also need steps to re-admit evicted (requeued) requests
             stepped = False

@@ -15,6 +15,12 @@ land in a live request's pages.
 ``defrag`` compacts the allocated set onto the lowest physical page ids
 (improving DMA locality after heavy churn) and returns the old→new
 mapping so the engine can permute pools and patch block tables.
+
+Live migration composes from these primitives: the source engine
+``free``\\ s a request's pages after gathering their contents into a
+:class:`~repro.serving.paged_engine.MigrationTicket`, and the
+destination ``alloc``\\ s fresh pages to scatter the KV back in — the
+invariants above guarantee the handoff can neither leak nor alias.
 """
 
 from __future__ import annotations
@@ -26,7 +32,21 @@ TRASH_PAGE = 0
 
 
 class PageAllocator:
-    """Free-list allocator over ``num_pages`` pages of ``page_size`` tokens."""
+    """Free-list allocator over ``num_pages`` pages of ``page_size`` tokens.
+
+    Parameters
+    ----------
+    num_pages : int
+        Total physical pages including the reserved trash page 0;
+        must be at least 2.
+    page_size : int
+        Tokens of KV per page.
+
+    Raises
+    ------
+    ValueError
+        If ``num_pages < 2`` (there would be no allocatable page).
+    """
 
     def __init__(self, num_pages: int, page_size: int) -> None:
         if num_pages < 2:
@@ -39,21 +59,76 @@ class PageAllocator:
     # -- capacity ------------------------------------------------------------
     @property
     def free_pages(self) -> int:
+        """Number of pages currently available for allocation.
+
+        Returns
+        -------
+        int
+            Free-list length (the trash page is never counted).
+        """
         return len(self._free)
 
     @property
     def used_pages(self) -> int:
+        """Number of pages currently owned by requests.
+
+        Returns
+        -------
+        int
+            Allocated page count.
+        """
         return len(self._owner)
 
     def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to store ``n_tokens`` tokens of KV.
+
+        Parameters
+        ----------
+        n_tokens : int
+            Token count (negative values are treated as 0).
+
+        Returns
+        -------
+        int
+            ``ceil(n_tokens / page_size)``.
+        """
         return -(-max(0, n_tokens) // self.page_size)
 
     def can_alloc(self, n: int) -> bool:
+        """Check whether ``n`` pages can be allocated atomically.
+
+        Parameters
+        ----------
+        n : int
+            Requested page count.
+
+        Returns
+        -------
+        bool
+            True when the free list holds at least ``n`` pages.
+        """
         return n <= len(self._free)
 
     # -- alloc/free ----------------------------------------------------------
     def alloc(self, n: int, owner: int = -1) -> Optional[List[int]]:
-        """Atomically allocate ``n`` pages; None if the pool can't satisfy."""
+        """Atomically allocate ``n`` pages.
+
+        Parameters
+        ----------
+        n : int
+            Page count; the request is all-or-nothing (no partial
+            allocation is ever observable).
+        owner : int, optional
+            Opaque owner tag recorded per page (typically the sequence
+            row); queried via :meth:`owned_by` and reported in error
+            messages.
+
+        Returns
+        -------
+        list of int or None
+            The allocated physical page ids (lowest-id-first), or
+            ``None`` when the pool cannot satisfy the request.
+        """
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
@@ -62,6 +137,19 @@ class PageAllocator:
         return pages
 
     def free(self, pages: List[int]) -> None:
+        """Return pages to the free list.
+
+        Parameters
+        ----------
+        pages : list of int
+            Page ids previously handed out by :meth:`alloc`.
+
+        Raises
+        ------
+        ValueError
+            On a double free or a page this allocator never allocated —
+            the error fires *before* any state is corrupted.
+        """
         for p in pages:
             if p not in self._owner:
                 raise ValueError(
@@ -71,21 +159,48 @@ class PageAllocator:
             self._free.append(p)
 
     def owned_by(self, owner: int) -> List[int]:
+        """List the pages held under an owner tag.
+
+        Parameters
+        ----------
+        owner : int
+            The tag passed to :meth:`alloc`.
+
+        Returns
+        -------
+        list of int
+            Sorted page ids currently owned by ``owner``.
+        """
         return sorted(p for p, o in self._owner.items() if o == owner)
 
     def check_no_leaks(self) -> None:
-        """All pages free (call when the engine is idle)."""
+        """Assert that every page has been returned.
+
+        Call when the engine is idle (e.g. at the end of a test or
+        after a migration handoff); a failure names the leaked pages.
+
+        Raises
+        ------
+        AssertionError
+            If any page is still owned.
+        """
         if self._owner:
             raise AssertionError(f"leaked pages: {sorted(self._owner)}")
         assert len(self._free) == self.num_pages - 1
 
     # -- defrag --------------------------------------------------------------
     def defrag(self) -> Dict[int, int]:
-        """Compact allocated pages onto the lowest ids; returns {old: new}.
+        """Compact allocated pages onto the lowest ids.
 
         The caller must apply the mapping to both the physical pools
         (permute page rows) and every live block table before the next
         kernel call.
+
+        Returns
+        -------
+        dict of int to int
+            ``{old_id: new_id}`` for every page that moved (identity
+            entries are omitted; empty when already compact).
         """
         live = sorted(self._owner)
         mapping = {old: new for new, old in enumerate(live, start=1)}

@@ -17,6 +17,13 @@ a pooled page store + per-request block tables:
   is dry, the youngest request is evicted — its pages freed, its request
   requeued for recompute-style restart — so older requests always run to
   completion (no livelock, matching vLLM's LIFO recompute policy);
+- **live migration** (Llumnix-style): a *decoding* request can be packed
+  into a :class:`MigrationTicket` — its KV pages gathered to host memory,
+  freed on the source — and resumed on a peer engine that allocates fresh
+  pages and scatters the KV back in.  Because the KV content is moved
+  bit-for-bit and greedy decode is deterministic, the migrated request
+  continues token-for-token as if it had never moved (no recompute, no
+  lost progress);
 - the measured per-batch-size step latency keeps feeding the Eq. 2
   batching-aware calibration profile exactly like the slot engine.
 """
@@ -25,6 +32,7 @@ from __future__ import annotations
 
 import time
 from collections import deque
+from dataclasses import dataclass
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -51,8 +59,80 @@ def _bucket(b: int, cap: int) -> int:
     return min(out, cap)
 
 
+@dataclass
+class MigrationTicket:
+    """Self-contained handoff state of one mid-decode request.
+
+    Produced by :meth:`PagedLLMEngine.export_request` and consumed by
+    :meth:`PagedLLMEngine.import_request`.  Holding a ticket means
+    holding the *only* copy of the request's KV: the source engine has
+    already returned its pages to its allocator, so a dropped ticket
+    loses decode progress (the request itself can still be restarted
+    recompute-style).
+
+    Attributes
+    ----------
+    req : Request
+        The in-flight request, including tokens generated so far.
+    last_token : int
+        The most recent greedy token — the next decode step's input.
+    length : int
+        Tokens currently materialized in the KV cache (prompt + decoded).
+    kv : dict
+        ``{layer_pattern_pos: {"k"|"v": ndarray}}`` — per-layer KV of
+        the owned pages, shape ``(n_sb, n_pages, page_size, K, hd)``,
+        gathered to host memory in block-table order.
+    n_pages : int
+        Number of pages in :attr:`kv` (and to allocate on import).
+    page_size : int
+        Tokens per page; source and destination must agree.
+    max_len : int
+        Source engine's per-sequence token limit; the destination's
+        must be at least as large, else the continuation could hit the
+        destination's length cutoff early and silently truncate.
+    model : str
+        Source engine's model-config name; replicas must match (live
+        migration assumes identical weights on both ends).
+    """
+
+    req: Request
+    last_token: int
+    length: int
+    kv: Dict[str, Dict[str, np.ndarray]]
+    n_pages: int
+    page_size: int
+    max_len: int
+    model: str
+
+
 class PagedLLMEngine(LatencyProfileMixin):
-    """One LLM executor with continuous batching over paged KV."""
+    """One LLM executor with continuous batching over paged KV.
+
+    Parameters
+    ----------
+    cfg : ModelConfig
+        Model architecture; must satisfy :func:`supports_paged`.
+    max_seqs : int, optional
+        Maximum concurrent sequence rows (decode batch bound).
+    max_len : int, optional
+        Maximum tokens per sequence (prompt + generated).
+    page_size : int, optional
+        Tokens per KV page.
+    num_pages : int, optional
+        Physical page-pool size (page 0 is the reserved trash page).
+        Defaults to no oversubscription: every row can reach
+        ``max_len``.  Smaller pools trade capacity for eviction churn —
+        this is the knob heterogeneous replicas differ in.
+    seed : int, optional
+        Parameter-init seed (ignored when ``params`` is given).
+    params : pytree, optional
+        Pre-built model weights.  Replicas that participate in live
+        migration must share identical weights.
+    greedy : bool, optional
+        Greedy decoding (the only mode the engines currently use).
+    prefill_chunk : int, optional
+        Prompt tokens processed per engine step (chunked prefill).
+    """
 
     def __init__(
         self,
@@ -102,6 +182,8 @@ class PagedLLMEngine(LatencyProfileMixin):
         self.prefilling: Dict[int, Tuple[Request, int]] = {}  # row -> (req, pos)
         self.waiting: Deque[Request] = deque()     # evicted, awaiting re-admit
         self.preemptions = 0
+        self.migrations_in = 0                     # requests imported live
+        self.migrations_out = 0                    # requests exported live
         self._admit_seq = 0
         self._row_seq: Dict[int, int] = {}
         self._init_latency()
@@ -120,18 +202,49 @@ class PagedLLMEngine(LatencyProfileMixin):
     # -- admission ----------------------------------------------------------
     @property
     def batch_size(self) -> int:
+        """Number of requests currently held (decoding + prefilling).
+
+        Returns
+        -------
+        int
+            Active plus prefilling rows; excludes the evicted ``waiting``
+            queue.
+        """
         return len(self.active) + len(self.prefilling)
 
     @property
     def max_batch(self) -> int:
+        """Maximum concurrent requests (interface parity with the slot engine).
+
+        Returns
+        -------
+        int
+            ``max_seqs``.
+        """
         return self.max_seqs
 
     @property
     def free_token_capacity(self) -> int:
-        """Tokens of KV the pool can still hold (drives placement)."""
+        """Tokens of KV the pool can still hold (drives placement).
+
+        Returns
+        -------
+        int
+            ``free_pages × page_size`` — the per-replica headroom the
+            scheduler's placement score and the rebalancer both consult.
+        """
         return self.allocator.free_pages * self.page_size
 
     def can_admit(self) -> bool:
+        """Cheap admission pre-filter.
+
+        Returns
+        -------
+        bool
+            True when a row is free, at least one page is free, and no
+            evicted request is waiting to re-enter.  :meth:`admit` may
+            still refuse a multi-page prompt — callers must handle that.
+        """
         return (
             not self.waiting
             and bool(self.free_rows)
@@ -139,7 +252,21 @@ class PagedLLMEngine(LatencyProfileMixin):
         )
 
     def admit(self, req: Request) -> bool:
-        """Capacity-based admission: refuse when the page pool is exhausted."""
+        """Admit a request if the page pool can hold prompt + 1 token.
+
+        Parameters
+        ----------
+        req : Request
+            The request to admit; its prompt must fit ``max_len``.
+
+        Returns
+        -------
+        bool
+            False when the pool or rows are exhausted, or when evicted
+            requests are waiting (they re-enter first — FIFO fairness
+            after preemption).  The caller keeps the task pending and
+            retries later.
+        """
         if self.waiting:  # evicted requests re-enter first
             return False
         return self._place(req)
@@ -262,8 +389,20 @@ class PagedLLMEngine(LatencyProfileMixin):
 
     # -- decode loop --------------------------------------------------------
     def step(self) -> List[Request]:
-        """One engine iteration: admit ← waiting, prefill a chunk, decode
-        one token for every running request.  Returns finished requests."""
+        """Run one engine iteration.
+
+        Re-admits evicted requests from ``waiting``, advances chunked
+        prefill by one chunk budget, grows pages (evicting youngest-first
+        when the pool is dry), then decodes one token for every running
+        request through the paged-attention kernel.
+
+        Returns
+        -------
+        list of Request
+            Requests that finished this step (budget reached, stop
+            token, or ``max_len``); their pages are already freed and
+            ``on_finish`` callbacks already fired.
+        """
         while self.waiting and self.free_rows:
             req = self.waiting[0]
             if not self._place(req):
@@ -324,9 +463,183 @@ class PagedLLMEngine(LatencyProfileMixin):
                     req.on_finish(req)
         return finished
 
+    # -- live migration -----------------------------------------------------
+    def youngest_active_row(self) -> Optional[int]:
+        """Return the most recently admitted *decoding* row.
+
+        The youngest row is the canonical migration candidate: it is the
+        row the LIFO eviction policy would sacrifice next, so moving it
+        to a peer replica converts a would-be recompute restart into a
+        lossless handoff.
+
+        Returns
+        -------
+        int or None
+            Row index, or ``None`` when nothing is decoding.
+        """
+        if not self.active:
+            return None
+        return max(self.active, key=lambda r: self._row_seq[r])
+
+    def can_accept_migration(self, n_pages: int) -> bool:
+        """Check whether an incoming ticket of ``n_pages`` pages fits.
+
+        Parameters
+        ----------
+        n_pages : int
+            Page count of the candidate :class:`MigrationTicket`.
+
+        Returns
+        -------
+        bool
+            True when a sequence row is free, the allocator can hand
+            out ``n_pages`` at once, and the page count fits this
+            engine's ``pages_per_seq`` geometry.
+        """
+        return (
+            bool(self.free_rows)
+            and n_pages <= self.pages_per_seq
+            and self.allocator.can_alloc(n_pages)
+        )
+
+    def export_request(self, row: int) -> MigrationTicket:
+        """Detach a decoding request: gather its KV, free its pages.
+
+        The half of the Llumnix-style handoff that runs on the source
+        replica.  After this returns, the engine holds no trace of the
+        request — its pages are back in the allocator's free list (leak
+        checked) and its row is reusable.  The caller owns the ticket
+        and must either :meth:`import_request` it somewhere or accept
+        losing the decode progress.
+
+        Parameters
+        ----------
+        row : int
+            An *active* (decoding) row.  Prefilling rows are not
+            migratable — their KV is cheaper to recompute than to move.
+
+        Returns
+        -------
+        MigrationTicket
+            Host-side copy of the request state and KV pages.
+
+        Raises
+        ------
+        ValueError
+            If ``row`` is not currently decoding.
+        """
+        if row not in self.active:
+            raise ValueError(f"row {row} is not decoding; cannot export")
+        req = self.active.pop(row)
+        pages = list(self.seq_pages[row])
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        kv: Dict[str, Dict[str, np.ndarray]] = {}
+        for j, pool in self.pools["blocks"].items():
+            kv[j] = {
+                "k": np.asarray(jax.device_get(pool["k"][:, idx])),
+                "v": np.asarray(jax.device_get(pool["v"][:, idx])),
+            }
+        ticket = MigrationTicket(
+            req=req,
+            last_token=int(self._tokens[row]),
+            length=int(self.lengths[row]),
+            kv=kv,
+            n_pages=len(pages),
+            page_size=self.page_size,
+            max_len=self.max_len,
+            model=self.cfg.name,
+        )
+        self._release_row(row)
+        self.migrations_out += 1
+        return ticket
+
+    def import_request(self, ticket: MigrationTicket) -> bool:
+        """Resume an exported request on this replica.
+
+        Allocates ``ticket.n_pages`` fresh pages from this engine's
+        allocator, scatters the ticket's KV into the local pools at the
+        new physical ids, rebuilds the block table, and resumes decode
+        from ``ticket.last_token``.  Under greedy decoding with shared
+        weights the continuation is token-for-token identical to an
+        unmigrated run.
+
+        Parameters
+        ----------
+        ticket : MigrationTicket
+            State produced by a peer's :meth:`export_request`.  Must
+            match this engine's ``page_size`` and model config.
+
+        Returns
+        -------
+        bool
+            False when no row/pages are available (the ticket remains
+            valid — callers typically re-import into the source).
+
+        Raises
+        ------
+        ValueError
+            On a page-size, model, or max_len mismatch (an incompatible
+            destination would corrupt the KV layout or silently
+            truncate the continuation at its shorter length cutoff).
+        """
+        if ticket.page_size != self.page_size:
+            raise ValueError(
+                f"page_size mismatch: ticket {ticket.page_size} "
+                f"vs engine {self.page_size}"
+            )
+        if ticket.model != self.cfg.name:
+            raise ValueError(
+                f"model mismatch: ticket {ticket.model!r} vs {self.cfg.name!r}"
+            )
+        if ticket.max_len > self.max_len:
+            raise ValueError(
+                f"max_len mismatch: ticket from a max_len={ticket.max_len} "
+                f"engine cannot resume on max_len={self.max_len} without "
+                "risking early truncation"
+            )
+        if ticket.n_pages > self.pages_per_seq or not self.free_rows:
+            return False
+        row = self.free_rows[0]
+        pages = self.allocator.alloc(ticket.n_pages, owner=row)
+        if pages is None:
+            return False
+        self.free_rows.pop(0)
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        blocks = {}
+        for j, pool in self.pools["blocks"].items():
+            blocks[j] = {
+                "k": pool["k"].at[:, idx].set(
+                    jnp.asarray(ticket.kv[j]["k"], pool["k"].dtype)
+                ),
+                "v": pool["v"].at[:, idx].set(
+                    jnp.asarray(ticket.kv[j]["v"], pool["v"].dtype)
+                ),
+            }
+        self.pools = {"blocks": blocks}
+        self.seq_pages[row] = pages
+        self.block_tables[row] = TRASH_PAGE
+        self.block_tables[row, : len(pages)] = pages
+        self.lengths[row] = ticket.length
+        self._tokens[row] = ticket.last_token
+        self.active[row] = ticket.req
+        self._admit_seq += 1
+        self._row_seq[row] = self._admit_seq
+        self.migrations_in += 1
+        return True
+
     # -- maintenance --------------------------------------------------------
     def defrag(self) -> int:
-        """Compact live pages onto low ids; returns #pages moved."""
+        """Compact live pages onto the lowest physical ids.
+
+        Permutes the KV pools and patches every live block table with
+        the allocator's old→new mapping, improving DMA locality after
+        heavy admission/eviction churn.
+
+        Returns
+        -------
+        int
+            Number of pages moved (0 when already compact).
+        """
         mapping = self.allocator.defrag()
         if not mapping:
             return 0

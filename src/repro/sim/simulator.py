@@ -14,6 +14,20 @@ Optional fault injection: executor failures re-queue running tasks
 (checkpoint/restart at the scheduling layer) and straggler tasks are
 re-issued once they exceed ``straggler_factor`` × their expected duration
 (speculative execution), mirroring what the large-scale runtime needs.
+
+Multi-replica serving is mirrored from ``repro.serving``: ``max_batch``
+may be a per-replica sequence (heterogeneous replicas), LLM dispatch
+honours the scheduler's placement hints (``Decision.placement``), and
+``kv_budget_tokens`` gives each replica a finite KV pool whose usage
+grows as its tasks decode — the simulator analog of the paged engines'
+page pools.  When a replica's KV overflows, its youngest task is
+preempted (recompute restart: all decoded tokens lost), exactly like
+the paged engine's LIFO eviction; with ``migrate=True`` the task is
+instead live-migrated to the replica with the most KV headroom, paying
+``migration_cost_s`` of decode-time stall (the KV transfer).  Without
+KV budgets, ``migrate=True`` falls back to batch-gap rebalancing.
+This lets fig7/fig9 sweep replica counts and migration on/off with the
+same cost mechanics the testbed measures for real.
 """
 
 from __future__ import annotations
@@ -61,6 +75,7 @@ class SimResult:
     makespan: float = 0.0
     preemptions: int = 0
     reissues: int = 0
+    migrations: int = 0  # cross-replica LLM-task moves (migrate=True)
 
     @property
     def avg_jct(self) -> float:
@@ -76,24 +91,98 @@ class SimResult:
 
 
 class ClusterSim:
+    """Event-driven simulation of one provider cluster.
+
+    Parameters
+    ----------
+    scheduler : Scheduler
+        Policy under test.
+    n_regular : int, optional
+        Regular executor count.
+    n_llm : int, optional
+        LLM replica count.
+    max_batch : int or sequence of int, optional
+        Per-replica batch capacity; a scalar applies to every replica,
+        a sequence of length ``n_llm`` models heterogeneous replicas.
+    latency_profile : LatencyProfile, optional
+        ``l(b)`` per-token decode latency (default: memory-bound
+        roofline shape).
+    failure_rate : float, optional
+        Executor failures per sim-second (0 disables).
+    straggler_factor : float, optional
+        Speculative re-issue threshold multiplier (0 disables).
+    migrate : bool, optional
+        Enable cross-replica live migration of running LLM tasks.
+    migration_cost_s : float, optional
+        Decode-time stall a migrated task pays (KV transfer cost),
+        converted to tokens at the batch-1 rate.
+    kv_budget_tokens : int or sequence of int, optional
+        Per-replica KV capacity in tokens (scalar applies to all).
+        ``None`` (default) models unbounded KV — the historical
+        behaviour.  With a budget, a replica whose running tasks'
+        decoded tokens exceed it preempts (or, with ``migrate=True``,
+        migrates away) its youngest task, mirroring the paged engine.
+    seed : int, optional
+        RNG seed for fault/straggler injection.
+    """
+
     def __init__(
         self,
         scheduler: Scheduler,
         n_regular: int = 4,
         n_llm: int = 1,
-        max_batch: int = 8,
+        max_batch=8,
         latency_profile: Optional[LatencyProfile] = None,
         failure_rate: float = 0.0,       # executor failures per sim-second
         straggler_factor: float = 0.0,   # 0 disables re-issue
+        migrate: bool = False,
+        migration_cost_s: float = 0.05,
+        kv_budget_tokens=None,
         seed: int = 0,
     ) -> None:
         self.scheduler = scheduler
         self.n_regular = n_regular
         self.n_llm = n_llm
-        self.max_batch = max_batch
-        self.profile = latency_profile or default_latency_profile(max_batch)
+        if isinstance(max_batch, (list, tuple)):
+            if len(max_batch) != n_llm:
+                raise ValueError(
+                    f"max_batch list length {len(max_batch)} != n_llm {n_llm}"
+                )
+            self._mb = [int(m) for m in max_batch]
+        else:
+            self._mb = [int(max_batch)] * n_llm
+        self.max_batch = max(self._mb) if self._mb else int(max_batch)
+        self.profile = latency_profile or default_latency_profile(self.max_batch)
         self.failure_rate = failure_rate
         self.straggler_factor = straggler_factor
+        self.migrate = bool(migrate)
+        self.migration_cost_s = float(migration_cost_s)
+        if kv_budget_tokens is None:
+            self._kv: Optional[List[float]] = None
+        elif isinstance(kv_budget_tokens, (list, tuple)):
+            if len(kv_budget_tokens) != n_llm:
+                raise ValueError(
+                    f"kv_budget_tokens list length {len(kv_budget_tokens)} "
+                    f"!= n_llm {n_llm}"
+                )
+            self._kv = [float(k) for k in kv_budget_tokens]
+        else:
+            self._kv = [float(kv_budget_tokens)] * n_llm
+        # KV mechanics (token analogs of the paged engine's page pool):
+        # one relief event must free at least a quantum (whole pages, not
+        # single tokens) and admission requires a reserve of headroom
+        # (can_admit refuses when the pool is nearly dry) — both prevent
+        # admit/evict churn storms around a saturated replica.
+        self.kv_relief_quantum = 64.0
+        self.kv_admission_reserve = 256.0
+        if self._kv is not None and any(
+            k < self.kv_admission_reserve for k in self._kv
+        ):
+            raise ValueError(
+                "kv_budget_tokens must be >= the admission reserve "
+                f"({self.kv_admission_reserve:.0f} tokens); smaller pools "
+                "would refuse every dispatch and deadlock the workload"
+            )
         self.rng = np.random.default_rng(seed)
 
     # ------------------------------------------------------------------ run
@@ -158,6 +247,99 @@ class ClusterSim:
                     best_t, best_e = slot[0], e
             return best_t, best_e
 
+        def kv_usage(e: int) -> float:
+            """Decoded tokens currently cached on replica ``e``.
+
+            Clamped per task to [0, out_tokens]: the migration stall is
+            charged as extra ``remaining_tokens``, which must not show
+            up as negative KV usage on the destination.
+            """
+            return sum(
+                max(
+                    0.0,
+                    rt.task.out_tokens - max(0.0, rt.remaining_tokens),
+                )
+                for rt in llm_running[e]
+            )
+
+        def kv_headroom(e: int) -> Optional[float]:
+            if self._kv is None:
+                return None
+            return self._kv[e] - kv_usage(e)
+
+        def sheddable_victim(e: int) -> Optional[RunningLLMTask]:
+            """Youngest task on ``e`` holding KV — never the oldest.
+
+            The oldest task is exempt (it may legitimately outgrow the
+            budget alone and must run to completion), the exact progress
+            guarantee the paged engine's strict-age eviction provides.
+            """
+            for rt in reversed(llm_running[e][1:]):
+                if rt.task.out_tokens - max(0.0, rt.remaining_tokens) > 0:
+                    return rt
+            return None
+
+        def next_kv_overflow() -> Tuple[float, int]:
+            """Earliest time a replica's KV usage reaches its budget."""
+            if self._kv is None:
+                return math.inf, -1
+            best_t, best_e = math.inf, -1
+            for e in range(self.n_llm):
+                b = llm_batch(e)
+                if b < 2:
+                    continue  # a lone request always runs to completion
+                head = self._kv[e] - kv_usage(e)
+                if head <= 0:
+                    if sheddable_victim(e) is not None:
+                        return now, e  # already over: relieve immediately
+                    continue  # only the exempt oldest holds KV
+                # usage grows at b tasks x 1/l(b) tokens/s each
+                t = now + head * self.profile.l(b) / b
+                if t < best_t:
+                    best_t, best_e = t, e
+            return best_t, best_e
+
+        def relieve_kv(e: int) -> None:
+            """Replica ``e`` hit its KV budget: shed youngest tasks until a
+            relief quantum of headroom exists (the paged engine frees whole
+            pages, not single tokens — the quantum prevents an event storm
+            of ever-smaller evictions).  Each victim is live-migrated to
+            the peer with the most KV headroom when ``migrate=True`` and a
+            fit exists, else preempted (recompute restart — its decoded
+            tokens are lost), mirroring the paged engine's LIFO eviction.
+            """
+            quantum = self.kv_relief_quantum
+            cost_tokens = self.migration_cost_s / self.profile.l(1)
+            while (kv_headroom(e) or 0.0) < quantum:
+                victim = sheddable_victim(e)  # youngest holder, never oldest
+                if victim is None:
+                    return  # nothing sheddable holds KV
+                used = victim.task.out_tokens - max(0.0, victim.remaining_tokens)
+                migrated = False
+                if self.migrate:
+                    best = None
+                    for x in range(self.n_llm):
+                        if x == e or llm_batch(x) >= self._mb[x]:
+                            continue
+                        head = kv_headroom(x)
+                        if head is not None and head > used + cost_tokens + quantum:
+                            if best is None or head > best[0]:
+                                best = (head, x)
+                    if best is not None:
+                        llm_running[e].remove(victim)
+                        victim.executor = best[1]
+                        victim.remaining_tokens += cost_tokens
+                        llm_running[best[1]].append(victim)
+                        res.migrations += 1
+                        migrated = True
+                if not migrated:
+                    llm_running[e].remove(victim)
+                    victim.task.state = TaskState.PENDING
+                    victim.task.start_time = -1.0
+                    victim.remaining_tokens = float(victim.task.out_tokens)
+                    job_by_id[victim.task.job_id].bump_evidence()
+                    res.preemptions += 1
+
         def on_stage_complete(job: Job, stage: Stage) -> None:
             # chain reveals + dynamic expansion + evidence-version bump
             reveal_after_stage(job, stage, gens)
@@ -181,14 +363,28 @@ class ClusterSim:
                         reg_running[e] = (now + dur, t)
                         did = True
                         break
-            # llm: least-loaded placement (paper §IV-D)
+            # llm: scheduler placement hint first (uncertainty/KV-aware),
+            # falling back to least-loaded (paper §IV-D) — the exact
+            # pre-placement behaviour for schedulers without hints
             for t in dec.llm:
                 if t.state is not TaskState.PENDING:
                     continue
-                loads = [(llm_batch(e), e) for e in range(self.n_llm)]
-                b, e = min(loads)
-                if b >= self.max_batch:
-                    break
+                def admissible(x: int) -> bool:
+                    if llm_batch(x) >= self._mb[x]:
+                        return False
+                    head = kv_headroom(x)
+                    return head is None or head >= self.kv_admission_reserve
+
+                e = dec.replica_for(t)
+                if e is None or not (0 <= e < self.n_llm) or not admissible(e):
+                    loads = [
+                        (llm_batch(x), x)
+                        for x in range(self.n_llm)
+                        if admissible(x)
+                    ]
+                    if not loads:
+                        break
+                    _, e = min(loads)
                 t.state = TaskState.RUNNING
                 t.start_time = now
                 job = job_by_id[t.job_id]
@@ -200,17 +396,54 @@ class ClusterSim:
                 did = True
             return did
 
+        def rebalance() -> None:
+            """Without KV budgets, ``migrate=True`` degrades to batch-gap
+            balancing: move running LLM tasks from the most- to the
+            least-loaded replica, each paying the KV-transfer stall as
+            extra decode tokens at the batch-1 rate.  (With KV budgets,
+            migration is driven by KV overflow instead — ``relieve_kv``.)
+            """
+            if not self.migrate or self.n_llm < 2 or self._kv is not None:
+                return
+            cost_tokens = self.migration_cost_s / self.profile.l(1)
+            while True:
+                bs = [llm_batch(e) for e in range(self.n_llm)]
+                recv = [e for e in range(self.n_llm) if bs[e] < self._mb[e]]
+                if not recv:
+                    return
+                e_max = max(range(self.n_llm), key=lambda e: bs[e])
+                e_min = min(recv, key=lambda e: bs[e])
+                if bs[e_max] - bs[e_min] < 2 or not llm_running[e_max]:
+                    return
+                rt = llm_running[e_max][-1]  # youngest dispatch (LIFO)
+                llm_running[e_max].remove(rt)
+                rt.executor = e_min
+                rt.remaining_tokens += cost_tokens
+                llm_running[e_min].append(rt)
+                res.migrations += 1
+
         def invoke_scheduler() -> None:
             view = ClusterView(
                 now=now,
                 free_regular=sum(1 for s in reg_running if s is None),
-                llm_loads=[(llm_batch(e), self.max_batch) for e in range(self.n_llm)],
+                llm_loads=[
+                    (llm_batch(e), self._mb[e]) for e in range(self.n_llm)
+                ],
                 latency_profile=self.profile,
+                llm_free_tokens=(
+                    None
+                    if self._kv is None
+                    else [
+                        max(0, int(kv_headroom(e) or 0))
+                        for e in range(self.n_llm)
+                    ]
+                ),
             )
             t0 = _time.perf_counter()
             dec = self.scheduler.schedule(active, view)
             res.sched_overhead_s.append(_time.perf_counter() - t0)
             dispatch(dec)
+            rebalance()
 
         job_by_id = {j.job_id: j for j in jobs}
 
@@ -219,14 +452,18 @@ class ClusterSim:
             t_arr = arrivals[ai].arrival_time if ai < len(arrivals) else math.inf
             t_llm, llm_rt = next_llm_completion()
             t_reg, reg_e = next_regular_completion()
-            t_next = min(t_arr, t_llm, t_reg, t_fail)
+            t_kv, kv_e = next_kv_overflow()
+            t_next = min(t_arr, t_llm, t_reg, t_fail, t_kv)
             if math.isinf(t_next):
                 break  # deadlock guard (should not happen)
             dt = t_next - now
             advance_llm(dt)
             now = t_next
 
-            if t_next == t_fail:
+            if t_next == t_kv and kv_e >= 0:
+                # KV pool overflow: live-migrate or preempt (LIFO)
+                relieve_kv(kv_e)
+            elif t_next == t_fail:
                 # executor failure: requeue its running work (the tasks are
                 # re-dispatched by the very next scheduling invocation —
                 # checkpoint/restart at the scheduling layer)

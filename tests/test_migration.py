@@ -1,0 +1,333 @@
+"""Live cross-replica KV migration: mechanism, policy, and payoff.
+
+Covers the multi-replica tentpole end to end:
+- the handoff preserves greedy decode token-for-token (the migrated
+  continuation equals an unmigrated reference run);
+- the allocator invariants survive the handoff (no leaks on the source,
+  exact ownership on the destination, double frees still caught);
+- the rollback path (destination refuses at the last moment) loses
+  neither the request nor pages;
+- the rebalancer converts eviction churn on a starved replica into
+  lossless migrations;
+- the scheduler's placement map sends LLM tasks to replicas with KV
+  headroom;
+- a seeded simulator run under a skewed arrival burst shows migration
+  reduces p95 JCT vs the identical no-migration cluster.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import FCFS, LLMSched, ProfileStore
+from repro.core.scheduler import ClusterView, task_key
+from repro.models import init_params
+from repro.serving import (
+    PagedLLMEngine,
+    Rebalancer,
+    Request,
+    migrate_request,
+)
+from repro.sim import generate_traces, generate_workload, get_generators
+from repro.sim.simulator import ClusterSim
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("stablelm_1_6b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.key(0))[0]
+
+
+def _drain(*engines, max_steps=400):
+    steps = 0
+    while any(e.batch_size or e.waiting for e in engines) and steps < max_steps:
+        for e in engines:
+            if e.batch_size or e.waiting:
+                e.step()
+        steps += 1
+    return steps
+
+
+def _collects(out):
+    return lambda r: out.__setitem__(r.rid, list(r.out_tokens))
+
+
+# ---------------------------------------------------------------------------
+# acceptance: token-for-token equality across a forced mid-decode move
+# ---------------------------------------------------------------------------
+def test_forced_migration_token_equality(cfg, params):
+    """Decode 4 tokens on A, migrate mid-decode to B, finish there: the
+    full output must equal an unmigrated reference run exactly."""
+    ref_out = {}
+    ref = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                         params=params)
+    ref.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=12,
+                      on_finish=_collects(ref_out)))
+    _drain(ref)
+
+    out = {}
+    a = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8, params=params)
+    b = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8, params=params)
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=12,
+                    on_finish=_collects(out)))
+    for _ in range(5):  # prefill + 4 decode steps
+        a.step()
+    row = a.youngest_active_row()
+    mid = list(a.active[row].out_tokens)
+    assert 0 < len(mid) < 12          # genuinely mid-decode
+    assert migrate_request(a, b, row)
+    a.allocator.check_no_leaks()      # source fully released immediately
+    assert a.batch_size == 0 and b.batch_size == 1
+    _drain(b)
+    b.allocator.check_no_leaks()
+    assert out == ref_out             # greedy continuation is unaffected
+    assert a.migrations_out == 1 and b.migrations_in == 1
+
+
+def test_migration_across_page_boundary_and_growth(cfg, params):
+    """Migrate a request whose KV spans several pages and which must
+    allocate fresh pages on the destination to keep growing."""
+    ref_out, out = {}, {}
+    ref = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=4,
+                         params=params)
+    ref.admit(Request(rid=7, prompt=list(range(1, 11)), max_new_tokens=20,
+                      on_finish=_collects(ref_out)))
+    _drain(ref)
+
+    a = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=4, params=params)
+    b = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=4, params=params)
+    a.admit(Request(rid=7, prompt=list(range(1, 11)), max_new_tokens=20,
+                    on_finish=_collects(out)))
+    for _ in range(8):
+        a.step()
+    row = a.youngest_active_row()
+    assert len(a.seq_pages[row]) >= 3       # multi-page KV really moves
+    assert migrate_request(a, b, row)
+    _drain(b)
+    assert out == ref_out
+    a.allocator.check_no_leaks()
+    b.allocator.check_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# allocator handoff invariants
+# ---------------------------------------------------------------------------
+def test_allocator_handoff_no_leak_no_double_free(cfg, params):
+    a = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8, params=params)
+    b = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8, params=params)
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=10))
+    for _ in range(3):
+        a.step()
+    row = a.youngest_active_row()
+    old_pages = list(a.seq_pages[row])
+    free_before = b.allocator.free_pages
+    ticket = a.export_request(row)
+    # source: pages returned exactly once; a second free must raise
+    a.allocator.check_no_leaks()
+    with pytest.raises(ValueError):
+        a.allocator.free(old_pages)
+    # destination: allocates exactly the ticket's page count
+    assert b.import_request(ticket)
+    assert b.allocator.free_pages == free_before - ticket.n_pages
+    new_row = b.youngest_active_row()
+    assert b.allocator.owned_by(new_row) == sorted(b.seq_pages[new_row])
+    _drain(b)
+    b.allocator.check_no_leaks()
+
+
+def test_import_rejects_incompatible_ticket(cfg, params):
+    a = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8, params=params)
+    b = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=4, params=params)
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    for _ in range(2):
+        a.step()
+    ticket = a.export_request(a.youngest_active_row())
+    with pytest.raises(ValueError):
+        b.import_request(ticket)          # page-size mismatch
+    # the ticket is still usable: source can take its request back
+    assert a.import_request(ticket)
+    _drain(a)
+    a.allocator.check_no_leaks()
+
+
+def test_migration_rejects_smaller_max_len_dest(cfg, params):
+    """A destination with a shorter max_len could silently truncate the
+    continuation: migrate_request must refuse up front (request stays on
+    the source) and a direct import must raise."""
+    a = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8, params=params)
+    c = PagedLLMEngine(cfg, max_seqs=2, max_len=32, page_size=8, params=params)
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    for _ in range(2):
+        a.step()
+    row = a.youngest_active_row()
+    assert not migrate_request(a, c, row)   # pre-checked: no export happened
+    assert row in a.active
+    ticket = a.export_request(row)
+    with pytest.raises(ValueError):
+        c.import_request(ticket)            # direct misuse still raises
+    assert a.import_request(ticket)         # ticket survives; roll back
+    _drain(a)
+    a.allocator.check_no_leaks()
+
+
+def test_sim_rejects_sub_reserve_kv_budget():
+    """A KV budget below the admission reserve would refuse every LLM
+    dispatch and deadlock silently — the constructor must reject it."""
+    with pytest.raises(ValueError):
+        ClusterSim(FCFS(), n_llm=1, max_batch=8, kv_budget_tokens=200)
+
+
+def test_migrate_request_rolls_back_when_dest_cannot_accept(cfg, params):
+    a = PagedLLMEngine(cfg, max_seqs=2, max_len=32, page_size=8, params=params)
+    b = PagedLLMEngine(cfg, max_seqs=1, max_len=32, page_size=8, params=params)
+    done = []
+    b.admit(Request(rid=9, prompt=[5, 6], max_new_tokens=25))  # occupies b
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=10,
+                    on_finish=lambda r: done.append(r.rid)))
+    for _ in range(2):
+        a.step()
+    row = a.youngest_active_row()
+    assert not migrate_request(a, b, row)  # no free row on b
+    assert row in a.active                 # request untouched on a
+    assert a.migrations_out == 0 and b.migrations_in == 0
+    _drain(a, b)
+    assert 0 in done
+    a.allocator.check_no_leaks()
+    b.allocator.check_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# rebalancer policy
+# ---------------------------------------------------------------------------
+def test_rebalancer_relieves_starved_replica(cfg, params):
+    """Pool too small for 3 growing requests on the small replica while a
+    big peer idles: the rebalancer must migrate (not evict) and everyone
+    finishes with zero recompute restarts."""
+    small = PagedLLMEngine(cfg, max_seqs=3, max_len=64, page_size=8,
+                           num_pages=10, params=params)
+    big = PagedLLMEngine(cfg, max_seqs=8, max_len=64, page_size=8,
+                         params=params)
+    done = []
+    for i in range(3):
+        assert small.admit(Request(rid=i, prompt=[1 + i] * 4,
+                                   max_new_tokens=40,
+                                   on_finish=lambda r: done.append(r.rid)))
+    rb = Rebalancer([small, big])
+    steps = 0
+    while (small.batch_size or small.waiting or big.batch_size) and steps < 300:
+        rb.step()
+        for e in (small, big):
+            if e.batch_size or e.waiting:
+                e.step()
+        steps += 1
+    assert sorted(done) == [0, 1, 2]
+    assert rb.migrations > 0
+    assert small.preemptions == 0        # migration pre-empted the eviction
+    small.allocator.check_no_leaks()
+    big.allocator.check_no_leaks()
+
+
+def test_rebalancer_ignores_balanced_fleet(cfg, params):
+    e1 = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                        params=params)
+    e2 = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                        params=params)
+    e1.admit(Request(rid=0, prompt=[1, 2], max_new_tokens=6))
+    e2.admit(Request(rid=1, prompt=[3, 4], max_new_tokens=6))
+    rb = Rebalancer([e1, e2])
+    assert rb.step() == 0                # nobody pressured: no churn
+    _drain(e1, e2)
+    assert rb.migrations == 0
+
+
+# ---------------------------------------------------------------------------
+# scheduler placement
+# ---------------------------------------------------------------------------
+def test_llmsched_places_llm_tasks_on_replicas_with_kv_headroom():
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 100, seed=7))
+    wl = generate_workload("mixed", 10, seed=4)
+    jobs = [gj.job for gj in wl]
+    sched = LLMSched(store, epsilon=0.2, seed=0)
+    view = ClusterView(
+        now=0.0, free_regular=4,
+        llm_loads=[(0, 8), (0, 8), (0, 8)],
+        llm_free_tokens=[0, 64, 4096],   # replica 0 has no KV left
+    )
+    dec = sched.schedule(jobs, view)
+    assert dec.llm                       # the workload has LLM work
+    placed = [dec.replica_for(t) for t in dec.llm]
+    # tasks beyond the fleet's projected batch+KV capacity stay unplaced
+    # (the runtime retries them next round); everything placed avoids
+    # the KV-exhausted replica 0 and uses the headroom-rich replica 2
+    assert any(p is not None for p in placed)
+    assert all(p in (1, 2) for p in placed if p is not None)
+    assert 2 in placed
+    # keys are stable task identities, not object ids
+    assert set(dec.placement) <= {task_key(t) for t in dec.llm}
+
+
+def test_placement_degenerates_to_least_loaded_without_kv_info():
+    """Same decision stream with and without the placement field being
+    consumed: no KV info -> placement must equal least-loaded order."""
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 100, seed=7))
+    wl = generate_workload("mixed", 6, seed=9)
+    jobs = [gj.job for gj in wl]
+    sched = LLMSched(store, epsilon=0.0, seed=0)
+    view = ClusterView(now=0.0, free_regular=4, llm_loads=[(2, 8), (0, 8)])
+    dec = sched.schedule(jobs, view)
+    # projected least-loaded: first two tasks go to replica 1 (load 0,1),
+    # then strict alternation as projected loads tie-break to index order
+    proj = [2, 0]
+    for t in dec.llm:
+        e = dec.replica_for(t)
+        if proj[0] >= 8 and proj[1] >= 8:
+            assert e is None     # projected full: left for the next round
+            continue
+        assert e == min(range(2), key=lambda x: (proj[x], x))
+        proj[e] += 1
+
+
+# ---------------------------------------------------------------------------
+# payoff: seeded sim, skewed burst
+# ---------------------------------------------------------------------------
+def test_sim_migration_reduces_p95_under_skewed_burst():
+    """Two KV-budgeted replicas under a compressed arrival burst: live
+    migration must cut p95 JCT and preemptions vs the identical cluster
+    without it (fully deterministic event-driven run)."""
+    def run(migrate: bool):
+        wl = generate_workload("mixed", 40, arrival_rate=3.0, seed=3)
+        sim = ClusterSim(FCFS(), n_regular=4, n_llm=2, max_batch=8,
+                         kv_budget_tokens=[3000, 8000],
+                         migrate=migrate, seed=0)
+        return sim.run(wl)
+
+    base = run(False)
+    mig = run(True)
+    assert len(base.jcts) == len(mig.jcts) == 40
+    assert base.migrations == 0 and mig.migrations > 0
+    assert mig.p95_jct < base.p95_jct
+    assert mig.avg_jct <= base.avg_jct
+    assert mig.preemptions < base.preemptions
+
+
+def test_sim_without_kv_budget_unchanged_by_migration_flag():
+    """No KV budgets and a single replica: the migrate flag must be a
+    no-op (guards the historical single-replica trajectories)."""
+    def run(migrate: bool):
+        wl = generate_workload("mixed", 12, arrival_rate=1.0, seed=5)
+        sim = ClusterSim(FCFS(), n_regular=4, n_llm=1, max_batch=8,
+                         migrate=migrate, seed=0)
+        return sim.run(wl)
+
+    a, b = run(False), run(True)
+    assert a.jcts == b.jcts and a.makespan == b.makespan
+    assert b.migrations == 0

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""Relative-link checker for the repo's markdown docs (stdlib-only).
+
+Walks the given markdown files/directories, extracts inline links and
+images (``[text](target)``), and verifies every *relative* target
+resolves to an existing file or directory (anchors are stripped;
+``http(s)``/``mailto`` targets are skipped — no network access).
+
+Usage: python tools/check_links.py README.md docs benchmarks/README.md
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def iter_md_files(args) -> list:
+    """Expand file/directory arguments into a list of markdown paths."""
+    out = []
+    for a in args:
+        p = Path(a)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.md")))
+        elif p.suffix == ".md":
+            out.append(p)
+        else:
+            print(f"warning: skipping non-markdown argument {a}")
+    return out
+
+
+def check(md: Path) -> list:
+    """Return ``(lineno, target)`` for every broken relative link."""
+    broken = []
+    in_code = False
+    for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+        if line.lstrip().startswith("```"):
+            in_code = not in_code
+            continue
+        if in_code:
+            continue
+        for m in LINK_RE.finditer(line):
+            target = m.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            if not (md.parent / rel).exists():
+                broken.append((lineno, target))
+    return broken
+
+
+def main(argv) -> int:
+    """Check all markdown under the given paths; return exit code."""
+    files = iter_md_files(argv or ["README.md", "docs"])
+    bad = 0
+    for md in files:
+        for lineno, target in check(md):
+            print(f"{md}:{lineno}: broken link -> {target}")
+            bad += 1
+    if bad:
+        print(f"{bad} broken link(s)")
+        return 1
+    print(f"links OK ({len(files)} markdown file(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

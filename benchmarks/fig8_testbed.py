@@ -17,17 +17,25 @@ records JCT plus migration/preemption counts (pass ``small_pages`` to
 starve replica 0 for the heterogeneous variant).  Artifact:
 ``benchmarks/out/fig8_multi_replica.json``.
 
+``prefix_cache`` serves a seeded shared-system-prompt compound trace
+(every request = one 32-token system prompt + a small per-request
+suffix) through the same paged engine twice — radix prefix cache off,
+then on — at an *equal KV page budget*, and records prefill tokens
+actually processed, JCT in engine steps, and cache hit/CoW/eviction
+counters.  Acceptance target: ≥ 30 % prefill-token reduction with no
+avg-JCT regression.  Artifact: ``benchmarks/out/fig8_prefix_cache.json``.
+
 CLI::
 
     PYTHONPATH=src python -m benchmarks.fig8_testbed            # everything
     PYTHONPATH=src python -m benchmarks.fig8_testbed multi_replica
     PYTHONPATH=src python -m benchmarks.fig8_testbed paged_vs_slot
+    PYTHONPATH=src python -m benchmarks.fig8_testbed prefix_cache --seed 3
 """
 
 from __future__ import annotations
 
 import json
-import sys
 import time
 from collections import deque
 from pathlib import Path
@@ -274,6 +282,144 @@ def multi_replica(
     return out
 
 
+def prefix_cache(
+    n_requests: int = 24,
+    shared_len: int = 32,
+    suffix_len: int = 4,
+    new_tokens: int = 12,
+    max_len: int = 96,
+    page_size: int = 8,
+    num_pages: int = 49,
+    max_seqs: int = 6,
+    prefill_chunk: int = 8,
+    seed: int = 3,
+) -> dict:
+    """Shared-system-prompt trace, radix prefix cache off vs on.
+
+    The compound-app pattern (PAPER.md §III): every request re-feeds
+    the same ``shared_len``-token system prompt followed by a short
+    request-specific suffix, so without reuse the fleet prefers to
+    redundantly prefill the identical prefix ``n_requests`` times.
+    Both modes run the *same* seeded trace on the *same* page budget
+    and are driven step-deterministically (JCT measured in engine
+    steps, wall time reported as a secondary metric); greedy decode
+    makes the per-request outputs identical across modes, so the
+    comparison isolates exactly the prefill work and its knock-on
+    queueing effects.
+
+    Writes ``benchmarks/out/fig8_prefix_cache.json`` with per-mode
+    prefill token totals, JCT (steps), cache counters, and the
+    headline ``prefill_reduction_pct`` (target: ≥ 30).
+    """
+    import numpy as np
+
+    cfg = get_smoke_config("stablelm_1_6b")
+    params = init_params(cfg, jax.random.key(0))[0]
+    rng = np.random.default_rng(seed)
+    shared = [3 + int(x) for x in rng.integers(0, 29, shared_len)]
+    suffixes = [
+        [40 + int(x) for x in rng.integers(0, 29, suffix_len)]
+        for _ in range(n_requests)
+    ]
+    arrivals = np.sort(rng.integers(0, 3 * n_requests, n_requests)).tolist()
+
+    out = {
+        "n_requests": n_requests,
+        "shared_prompt_tokens": shared_len,
+        "suffix_tokens": suffix_len,
+        "new_tokens": new_tokens,
+        "page_size": page_size,
+        "num_pages": num_pages,
+        "prefill_chunk": prefill_chunk,
+        "seed": seed,
+        "model": cfg.name,
+    }
+    rows = []
+    outputs = {}
+    for mode, cached in (("no_cache", False), ("cache", True)):
+        eng = PagedLLMEngine(
+            cfg, max_seqs=max_seqs, max_len=max_len, page_size=page_size,
+            num_pages=num_pages, params=params, prefill_chunk=prefill_chunk,
+            prefix_cache=cached,
+        )
+        cur_step = [0]
+        finish_step = {}
+        toks = {}
+
+        def _done(req, _fs=finish_step, _tk=toks, _cs=cur_step):
+            _fs[req.rid] = _cs[0]
+            _tk[req.rid] = list(req.out_tokens)
+
+        pending = deque(
+            (arrivals[i],
+             Request(rid=i, prompt=shared + suffixes[i],
+                     max_new_tokens=new_tokens, on_finish=_done))
+            for i in range(n_requests)
+        )
+        reqs = [r for _, r in pending]
+        t0 = time.perf_counter()
+        while pending or eng.batch_size or eng.waiting:
+            while pending and pending[0][0] <= cur_step[0]:
+                _, req = pending[0]
+                if not (eng.can_admit() and eng.admit(req)):
+                    break
+                pending.popleft()
+            if eng.batch_size or eng.waiting:
+                eng.step()
+            cur_step[0] += 1
+        wall = time.perf_counter() - t0
+        eng.allocator.check_no_leaks()
+        outputs[mode] = toks
+        jcts = [finish_step[i] - arrivals[i] for i in range(n_requests)]
+        prefill = sum(r.prefill_tokens for r in reqs)
+        idx = eng.prefix_index
+        out[mode] = {
+            "prefill_tokens": prefill,
+            "prefill_skipped_tokens": eng.prefill_skipped_tokens,
+            "avg_jct_steps": round(float(np.mean(jcts)), 2),
+            "p95_jct_steps": round(float(np.percentile(jcts, 95)), 2),
+            "makespan_steps": cur_step[0],
+            "wall_s": round(wall, 3),
+            "preemptions": eng.preemptions,
+            "cow_copies": eng.cow_copies,
+            "prefix_hits": idx.hits if idx else 0,
+            "prefix_evictions": idx.evictions if idx else 0,
+        }
+        rows.append([mode, prefill, eng.prefill_skipped_tokens,
+                     out[mode]["avg_jct_steps"], out[mode]["p95_jct_steps"],
+                     eng.preemptions, out[mode]["prefix_hits"],
+                     eng.cow_copies])
+    assert outputs["cache"] == outputs["no_cache"], (
+        "prefix cache changed greedy decode outputs"
+    )
+    out["outputs_identical"] = True
+    base = out["no_cache"]["prefill_tokens"]
+    out["prefill_reduction_pct"] = round(
+        100.0 * (base - out["cache"]["prefill_tokens"]) / max(base, 1), 1
+    )
+    out["jct_delta_pct"] = round(
+        100.0
+        * (out["no_cache"]["avg_jct_steps"] - out["cache"]["avg_jct_steps"])
+        / max(out["no_cache"]["avg_jct_steps"], 1e-9),
+        1,
+    )
+    emit_csv(
+        f"fig8_prefix_cache ({n_requests} shared-prompt requests, equal KV "
+        "budget; JCT in engine steps)",
+        ["mode", "prefill_tok", "skipped_tok", "avg_jct_steps",
+         "p95_jct_steps", "preemptions", "hits", "cow"],
+        rows,
+    )
+    print(
+        f"# prefill-token reduction: {out['prefill_reduction_pct']}% "
+        f"(avg-JCT delta: {out['jct_delta_pct']}%)\n"
+    )
+    OUT_DIR.mkdir(exist_ok=True)
+    with open(OUT_DIR / "fig8_prefix_cache.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
 def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11,
          include_artifacts: bool = True) -> dict:
     t0 = time.time()
@@ -305,22 +451,31 @@ def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11,
     if include_artifacts:
         results["paged_vs_slot"] = paged_vs_slot()
         results["multi_replica"] = multi_replica()
+        results["prefix_cache"] = prefix_cache()
     print(f"# fig8 wall time: {time.time()-t0:.0f}s\n")
     return results
 
 
 if __name__ == "__main__":
-    mode = sys.argv[1] if len(sys.argv) > 1 else "all"
-    if mode == "multi_replica":
-        multi_replica()
-    elif mode == "paged_vs_slot":
-        paged_vs_slot()
-    elif mode == "schedulers":
-        main(include_artifacts=False)
-    elif mode == "all":
-        main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument(
+        "mode", nargs="?", default="all",
+        choices=["all", "schedulers", "paged_vs_slot", "multi_replica",
+                 "prefix_cache"],
+    )
+    ap.add_argument("--seed", type=int, default=None,
+                    help="trace seed (defaults to each mode's seeded value)")
+    args = ap.parse_args()
+    seed_kw = {} if args.seed is None else {"seed": args.seed}
+    if args.mode == "multi_replica":
+        multi_replica(**seed_kw)
+    elif args.mode == "paged_vs_slot":
+        paged_vs_slot(**seed_kw)
+    elif args.mode == "prefix_cache":
+        prefix_cache(**seed_kw)
+    elif args.mode == "schedulers":
+        main(include_artifacts=False, **seed_kw)
     else:
-        raise SystemExit(
-            f"unknown mode {mode!r}; use all | schedulers | "
-            "paged_vs_slot | multi_replica"
-        )
+        main(**seed_kw)

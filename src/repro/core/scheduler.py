@@ -69,6 +69,15 @@ class ClusterView:
         page size for paged engines).  ``None`` when the runtime has no
         paged KV accounting (e.g. the simulator or the slot engine);
         placement then falls back to pure load balancing.
+    llm_prefix_hit_tokens : list of int, optional
+        Per-LLM-replica estimate of reusable prefix KV in *tokens*
+        (the radix index's resident cached tokens for paged engines
+        with prefix caching; the modeled shared-prompt residency in the
+        simulator).  A task landing on a replica with more resident
+        prefix tokens is more likely to skip prefill work.  ``None``
+        when no replica runs a prefix cache — the placement score then
+        degenerates exactly to its cache-blind form (an all-zero list
+        degenerates identically).
     """
 
     now: float
@@ -78,6 +87,8 @@ class ClusterView:
     latency_profile: Optional[LatencyProfile] = None
     # per-LLM-executor free KV capacity in tokens (None: not paged)
     llm_free_tokens: Optional[List[int]] = None
+    # per-LLM-executor resident reusable-prefix tokens (None: no cache)
+    llm_prefix_hit_tokens: Optional[List[int]] = None
 
     def llm_free_slots(self) -> int:
         """Return the total number of free batch slots across replicas.
@@ -221,16 +232,27 @@ class LLMSched(Scheduler):
     Multi-replica placement: after building the preference lists, each
     LLM task is assigned a replica with the score
 
-    ``score(e) = w_u · kv_headroom(e) − (1 − w_u) · load(e)``
+    ``score(e) = w_u · kv_headroom(e) − (1 − w_u) · load(e)
+    + w_c · prefix_hit(e)``
 
     where ``w_u = 0.25 + 0.5·u`` and ``u ∈ [0, 1]`` is the job's
     normalized duration-bound width (entropy proxy).  Certain jobs
     (``u → 0``) weight the load term — they bin-pack tightly for low
     decode latency; uncertain jobs (``u → 1``) weight KV headroom —
     their unpredictable expansion needs room to grow without triggering
-    eviction.  When the view has no KV accounting
-    (``llm_free_tokens is None``), placement degenerates to exact
-    least-loaded-by-absolute-batch (lowest index on ties) — including
+    eviction.  ``prefix_hit(e)`` is the replica's resident reusable-
+    prefix tokens (``ClusterView.llm_prefix_hit_tokens``) normalized by
+    the fleet maximum, weighted by the fixed cache weight ``w_cache``:
+    compound-app tasks steered to the replica already holding their
+    shared prompt's KV skip that prefill entirely.  When the view
+    carries no prefix info (``None``) the term is omitted, and when it
+    is all-zero the term contributes exactly ``0.0`` to every
+    candidate — either way the score is bit-identical to the
+    cache-blind form, so seeded trajectories are unchanged.  When the
+    view has no KV accounting (``llm_free_tokens is None``), placement
+    degenerates to least-loaded-by-absolute-batch (prefix residency
+    breaking ties ahead of the index when known, which the all-zero
+    and ``None`` cases again leave byte-identical) — including
     heterogeneous ``max_batch`` fleets — preserving the historical
     dispatcher behaviour byte-for-byte.
 
@@ -256,6 +278,12 @@ class LLMSched(Scheduler):
     #: running LLM task (the scheduler cannot see true output lengths,
     #: which are ground truth hidden until completion).
     kv_reserve_tokens = 64
+
+    #: Weight of the cache-affinity term in the placement score.  Small
+    #: relative to the uncertainty/load terms: prefix reuse is a cost
+    #: saving, not a correctness constraint, and must not override KV
+    #: headroom for high-uncertainty jobs.
+    w_cache = 0.2
 
     def __init__(
         self,
@@ -513,14 +541,15 @@ class LLMSched(Scheduler):
         view: ClusterView,
         uncertainty: Dict[int, float],
     ) -> None:
-        """Assign each LLM task a replica via the uncertainty/KV score.
+        """Assign each LLM task a replica via the uncertainty/KV/cache score.
 
         Projects batch occupancy and KV headroom forward as tasks are
         placed, so one round's placements never overcommit a replica.
         Without ``llm_free_tokens`` the score reduces to least-loaded
-        (lowest index on ties) — identical to the pre-placement
-        dispatchers, keeping seeded single/multi-replica sim
-        trajectories unchanged.
+        (prefix residency breaks ties when known, then lowest index) —
+        identical to the pre-placement dispatchers whenever the view
+        carries no (or all-zero) prefix info, keeping seeded
+        single/multi-replica sim trajectories unchanged.
         """
         n = len(view.llm_loads)
         if n == 0 or not dec.llm:
@@ -532,6 +561,12 @@ class LLMSched(Scheduler):
             if view.llm_free_tokens is not None
             else None
         )
+        hit_tok = view.llm_prefix_hit_tokens
+        hit_norm = (
+            [h / max(max(hit_tok), 1) for h in hit_tok]
+            if hit_tok is not None
+            else [0.0] * n
+        )
         for t in dec.llm:
             u = uncertainty.get(t.job_id, 0.5)
             w = 0.25 + 0.5 * u
@@ -540,10 +575,13 @@ class LLMSched(Scheduler):
                 # no KV accounting: exact least-loaded by absolute batch
                 # (decode latency is l(b) in the absolute batch size) —
                 # byte-identical to the historical dispatchers, including
-                # heterogeneous max_batch fleets
+                # heterogeneous max_batch fleets; resident prefix tokens
+                # (when reported) only break exact-load ties
                 cands = [e for e in range(n) if proj_b[e] < mbs[e]]
                 if cands:
-                    best = min(cands, key=lambda e: (proj_b[e], e))
+                    best = min(
+                        cands, key=lambda e: (proj_b[e], -hit_norm[e], e)
+                    )
             else:
                 best_score = -math.inf
                 for e in range(n):
@@ -553,7 +591,11 @@ class LLMSched(Scheduler):
                         continue  # no KV left: placing guarantees refusal
                     load = proj_b[e] / mbs[e]
                     kv = free_tok[e] / max(max(free_tok), 1)
-                    score = w * kv - (1.0 - w) * load
+                    score = (
+                        w * kv
+                        - (1.0 - w) * load
+                        + self.w_cache * hit_norm[e]
+                    )
                     if score > best_score + 1e-12:
                         best, best_score = e, score
             if best is None:

@@ -13,11 +13,20 @@ token-for-token.  ``--kv-pages`` makes the fleet heterogeneous — e.g.
 large one, the regime where uncertainty-aware placement and live
 migration earn their keep.
 
+``--prefix-cache`` (paged engines only) enables shared-prefix KV reuse:
+each replica keeps a radix index over full prompt pages, admission
+adopts cached prefixes copy-free, and the scheduler's placement score
+gains the cache-affinity term.  Pair it with ``--shared-prompt N`` so
+each application's tasks actually share an N-token system prompt —
+the workload shape where the cache pays.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --mix planning --jobs 12 --scheduler llmsched
   PYTHONPATH=src python -m repro.launch.serve --engine paged \
       --replicas 2 --kv-pages 13,49 --migrate
+  PYTHONPATH=src python -m repro.launch.serve --engine paged \
+      --replicas 2 --prefix-cache --shared-prompt 32
 """
 
 from __future__ import annotations
@@ -60,11 +69,14 @@ def build_engines(args, cfg):
                 page_size=args.page_size,
                 num_pages=kv_pages[i] if kv_pages else None,
                 params=params,
+                prefix_cache=args.prefix_cache,
             )
             for i in range(n)
         ]
     if args.migrate:
         raise SystemExit("--migrate requires --engine paged")
+    if args.prefix_cache:
+        raise SystemExit("--prefix-cache requires --engine paged")
     return [
         LLMEngine(cfg, max_batch=args.max_batch, max_len=96,
                   seed=args.seed + i)
@@ -93,6 +105,12 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pages", default=None,
                     help="comma list of per-replica page-pool sizes "
                          "(heterogeneous KV budgets), e.g. 13,49")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix KV reuse via a radix index "
+                         "(paged only)")
+    ap.add_argument("--shared-prompt", type=int, default=0,
+                    help="tokens of per-application shared system prompt "
+                         "prepended to every LLM task's request")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--regular", type=int, default=4)
@@ -100,6 +118,15 @@ def main(argv=None) -> int:
     ap.add_argument("--token-scale", type=float, default=20.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    # engines are built with max_len=96; the synthesized prompt is
+    # shared + 2 suffix tokens and needs one decode slot on top
+    if args.shared_prompt > 93:
+        raise SystemExit(
+            f"--shared-prompt {args.shared_prompt} too large: the "
+            "synthesized prompt (+2 suffix tokens) must fit the "
+            "engines' max_len of 96"
+        )
 
     gens = get_generators()
     apps = [g.template for g in gens.values()]
@@ -112,6 +139,7 @@ def main(argv=None) -> int:
         sched, engines, n_regular=args.regular,
         token_scale=args.token_scale, time_scale=args.token_scale,
         migrate=args.migrate,
+        shared_prompt_tokens=args.shared_prompt,
     )
     wl = generate_workload(args.mix, args.jobs, arrival_rate=0.9, seed=args.seed)
     res = cluster.run(wl)
@@ -120,7 +148,8 @@ def main(argv=None) -> int:
         f"replicas={len(engines)} jobs={len(res.jcts)} "
         f"avg_jct={res.avg_jct:.2f}s makespan={res.makespan:.1f}s "
         f"tokens={res.tokens_generated} overhead={res.avg_overhead_ms:.2f}ms "
-        f"preemptions={res.preemptions} migrations={res.migrations}"
+        f"preemptions={res.preemptions} migrations={res.migrations} "
+        f"prefill={res.prefill_tokens} prefill_saved={res.prefill_saved_tokens}"
     )
     return 0
 

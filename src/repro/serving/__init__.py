@@ -14,12 +14,13 @@ KV-starved replicas onto peers with headroom.
 
 from .engine import LLMEngine, Request
 from .paged_cache import PageAllocator, TRASH_PAGE
+from .prefix_cache import RadixPrefixIndex
 from .paged_engine import MigrationTicket, PagedLLMEngine
 from .migration import Rebalancer, migrate_request
 from .cluster import ServingCluster, TestbedResult
 
 __all__ = [
     "LLMEngine", "PagedLLMEngine", "Request", "PageAllocator", "TRASH_PAGE",
-    "MigrationTicket", "Rebalancer", "migrate_request",
+    "RadixPrefixIndex", "MigrationTicket", "Rebalancer", "migrate_request",
     "ServingCluster", "TestbedResult",
 ]

@@ -16,11 +16,19 @@ the scheduler's per-task placement hints (``Decision.placement``), and
 — with ``migrate=True`` — runs a :class:`~repro.serving.migration.
 Rebalancer` each loop iteration to live-migrate decoding requests off
 KV-starved paged replicas.
+
+Prefix-cache fleets additionally report per-replica resident prefix
+tokens (``ClusterView.llm_prefix_hit_tokens``) so cache-aware placement
+can steer an application's tasks to the replica already holding its
+shared system prompt; ``shared_prompt_tokens`` synthesizes exactly that
+workload shape, and per-job prefill token totals are recorded for the
+sim↔testbed cache-model parity canary.
 """
 
 from __future__ import annotations
 
 import time
+import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -53,6 +61,14 @@ class TestbedResult:
         Paged-engine evictions (pages freed + recompute requeue).
     migrations : int
         Live cross-replica migrations performed by the rebalancer.
+    prefill_tokens : int
+        Prompt tokens actually run through prefill across all engines
+        (prefix-cache hits skip tokens and so reduce this).
+    prefill_saved_tokens : int
+        Prompt tokens skipped thanks to shared-prefix KV reuse.
+    prefill_by_job : dict
+        ``job_id → prefilled tokens`` for cross-runtime cache-model
+        rank comparisons (sim ↔ testbed parity).
     """
 
     jcts: List[float] = field(default_factory=list)
@@ -62,6 +78,9 @@ class TestbedResult:
     tokens_generated: int = 0
     preemptions: int = 0  # paged-engine evictions (pages freed + requeue)
     migrations: int = 0   # live cross-replica KV handoffs
+    prefill_tokens: int = 0          # prompt tokens actually prefilled
+    prefill_saved_tokens: int = 0    # prompt tokens skipped via prefix reuse
+    prefill_by_job: Dict[int, int] = field(default_factory=dict)
 
     @property
     def avg_jct(self) -> float:
@@ -109,6 +128,12 @@ class ServingCluster:
     rebalancer : Rebalancer, optional
         Custom policy instance; built with defaults when ``migrate``
         is set and none is given.
+    shared_prompt_tokens : int, optional
+        When > 0, each LLM task's engine prompt is synthesized as an
+        application-wide shared system prefix of this many tokens
+        followed by a short stage/task-specific suffix — the compound-
+        app pattern that makes prefix caching pay.  0 (default) keeps
+        the historical 2-token prompts byte-for-byte.
     """
 
     def __init__(
@@ -121,6 +146,7 @@ class ServingCluster:
         min_tokens: int = 2,
         migrate: bool = False,
         rebalancer: Optional[Rebalancer] = None,
+        shared_prompt_tokens: int = 0,
     ) -> None:
         self.scheduler = scheduler
         self.engines = engines
@@ -130,8 +156,42 @@ class ServingCluster:
         self.min_tokens = min_tokens
         self.migrate = migrate
         self.rebalancer = rebalancer
+        self.shared_prompt_tokens = int(shared_prompt_tokens)
         if migrate and self.rebalancer is None:
             self.rebalancer = Rebalancer(engines)
+
+    def _prompt_for(self, task: Task, app_name: str) -> List[int]:
+        """Synthesize the engine prompt for an LLM task.
+
+        With ``shared_prompt_tokens`` set, tasks of one application
+        share a deterministic system-prompt prefix (page-alignable, so
+        prefix-cache replicas deduplicate it) and differ only in a
+        short stage/index suffix.  Uses ``zlib.crc32`` — not ``hash``
+        — for the shared part so the token stream is stable across
+        processes and runs.
+
+        Parameters
+        ----------
+        task : Task
+            The LLM task being dispatched.
+        app_name : str
+            The owning job's application template name.
+
+        Returns
+        -------
+        list of int
+            Token ids for the engine request.
+        """
+        if self.shared_prompt_tokens <= 0:
+            return [1 + (hash(task.stage_name) % 32), 2 + task.index % 7]
+        base = zlib.crc32(app_name.encode())
+        sys_prompt = [
+            1 + (base + 31 * k) % 97 for k in range(self.shared_prompt_tokens)
+        ]
+        return sys_prompt + [
+            1 + (zlib.crc32(task.stage_name.encode()) % 32),
+            2 + task.index % 7,
+        ]
 
     def run(self, workload: Sequence[GeneratedJob]) -> TestbedResult:
         """Serve a compound-job workload to completion.
@@ -215,7 +275,8 @@ class ServingCluster:
                 cands.sort(
                     key=lambda e: (
                         e.batch_size,
-                        -getattr(e, "free_token_capacity", 0),
+                        -getattr(e, "free_token_capacity", 0)
+                        - getattr(e, "reclaimable_token_capacity", 0),
                     )
                 )
                 placed = dec.replica_for(t)
@@ -226,11 +287,16 @@ class ServingCluster:
                         cands.insert(0, pe)
                 rid_counter[0] += 1
                 n_tok = max(self.min_tokens, int(t.out_tokens / self.token_scale))
-                prompt = [1 + (hash(t.stage_name) % 32), 2 + t.index % 7]
+                prompt = self._prompt_for(t, job_by_id[t.job_id].app.name)
                 task = t
 
                 def _done(req: Request, task=task) -> None:
                     res.tokens_generated += len(req.out_tokens)
+                    res.prefill_tokens += req.prefill_tokens
+                    res.prefill_by_job[task.job_id] = (
+                        res.prefill_by_job.get(task.job_id, 0)
+                        + req.prefill_tokens
+                    )
                     finish_task(task)
 
                 req = Request(
@@ -255,8 +321,19 @@ class ServingCluster:
             prof = None
             for e in self.engines:
                 prof = e.latency_profile() or prof
+            # dormant prefix pages are reclaimable on admission, so a
+            # cache-heavy replica must not read as KV-starved — that
+            # would starve exactly the replica the cache-affinity term
+            # wants to prefer (reclaimable is 0 without a prefix cache)
             free_tok = [
-                getattr(e, "free_token_capacity", None) for e in self.engines
+                None
+                if getattr(e, "free_token_capacity", None) is None
+                else e.free_token_capacity
+                + getattr(e, "reclaimable_token_capacity", 0)
+                for e in self.engines
+            ]
+            hit_tok = [
+                getattr(e, "prefix_cached_tokens", None) for e in self.engines
             ]
             return ClusterView(
                 now=now(),
@@ -266,6 +343,10 @@ class ServingCluster:
                 # KV accounting only when every replica reports it
                 llm_free_tokens=(
                     free_tok if all(f is not None for f in free_tok) else None
+                ),
+                # cache-affinity signal only when every replica caches
+                llm_prefix_hit_tokens=(
+                    hit_tok if all(h is not None for h in hit_tok) else None
                 ),
             )
 
@@ -309,4 +390,7 @@ class ServingCluster:
                     time.sleep(1e-3)
         res.makespan = now()
         res.preemptions = sum(getattr(e, "preemptions", 0) for e in self.engines)
+        res.prefill_saved_tokens = sum(
+            getattr(e, "prefill_skipped_tokens", 0) for e in self.engines
+        )
         return res

@@ -38,6 +38,9 @@ class Request:
     started_at: float = -1.0
     finished_at: float = -1.0
     on_finish: Optional[Callable[["Request"], None]] = None
+    # prompt tokens actually run through prefill (cumulative across
+    # recompute restarts; prefix-cache hits skip tokens and so reduce it)
+    prefill_tokens: int = 0
 
     def done(self) -> bool:
         return self.finished_at >= 0
@@ -129,6 +132,7 @@ class LLMEngine(LatencyProfileMixin):
             return False
         slot = self.free_slots.pop(0)
         toks = jnp.asarray([req.prompt], jnp.int32)
+        req.prefill_tokens += len(req.prompt)
         last_logits, req_cache = self._prefill(self.params, toks)
         self._merge_slot(slot, req_cache, len(req.prompt))
         first = self._pick(last_logits[0])

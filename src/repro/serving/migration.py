@@ -28,13 +28,19 @@ from .paged_engine import PagedLLMEngine
 def migrate_request(
     src: PagedLLMEngine, dst: PagedLLMEngine, row: int
 ) -> bool:
-    """Move one decoding request from ``src`` to ``dst``, losslessly.
+    """Move one decoding request from ``src`` to ``dst``.
 
-    Exports the request's KV pages from ``src`` (freeing them there) and
-    imports them into ``dst``.  If the destination refuses at the last
-    moment, the ticket is re-imported into the source — the pages it
-    just freed are by construction sufficient — so the request is never
-    lost and no allocator leaks either way.
+    Exports the request's KV pages from ``src`` (dropping its
+    references there) and imports them into ``dst``; a successful move
+    is lossless — the greedy continuation is token-for-token identical.
+    If the destination refuses at the last moment, the ticket is
+    re-imported into the source; should even that fail (with prefix
+    sharing, pages the export released may have stayed alive for
+    co-owners, so the free list did not necessarily regrow by
+    ``n_pages``), the request falls back to a recompute-style restart
+    in the source's ``waiting`` queue — decode progress is lost in that
+    corner, but the request never is, and no allocator leaks either
+    way.
 
     Parameters
     ----------
@@ -68,10 +74,19 @@ def migrate_request(
     if dst.import_request(ticket):
         return True
     # Destination raced out of capacity between check and import: put the
-    # request back where it came from (its pages were just freed there).
-    restored = src.import_request(ticket)
-    assert restored, "rollback import must succeed on freshly freed pages"
-    src.migrations_in -= 1   # a rollback is not a real migration
+    # request back where it came from.  With prefix sharing the pages it
+    # freed may have stayed alive for co-owners (refcount > 1 entries in
+    # ticket.page_refcounts), so the rollback import can itself fail — in
+    # that case fall back to a recompute-style restart on the source: the
+    # decode progress is lost but the request never is.
+    if src.import_request(ticket):
+        src.migrations_in -= 1   # a rollback is not a real migration
+        src.migrations_out -= 1
+        return False
+    ticket.req.out_tokens.clear()
+    ticket.req.started_at = -1.0
+    src.waiting.appendleft(ticket.req)
+    src.preemptions += 1
     src.migrations_out -= 1
     return False
 
@@ -129,7 +144,9 @@ class Rebalancer:
         if eng.waiting:
             return True
         total = max(1, eng.num_pages - 1)
-        return eng.allocator.free_pages <= self.low_watermark * total
+        # dormant prefix pages are reclaimable headroom, not pressure
+        free = eng.allocator.free_pages + eng.allocator.dormant_pages
+        return free <= self.low_watermark * total
 
     def step(self) -> int:
         """Run one rebalancing pass over the fleet.
@@ -160,13 +177,23 @@ class Rebalancer:
             # onto a destination that would immediately evict it.
             need = len(src.seq_pages[row]) + 1
             best = None
+            src_free = (
+                src.allocator.free_pages + src.allocator.dormant_pages
+            )
             for dst in self.engines:
                 if dst is src or not dst.can_accept_migration(need):
                     continue
-                after = dst.allocator.free_pages - need
+                # dormant prefix pages are reclaimable headroom on both
+                # sides of the comparison (0 without a prefix cache), so
+                # a cache-warm destination is not scored as full
+                after = (
+                    dst.allocator.free_pages
+                    + dst.allocator.dormant_pages
+                    - need
+                )
                 if after < self.hysteresis_pages:
                     continue
-                if after <= src.allocator.free_pages:
+                if after <= src_free:
                     continue  # destination would end up no healthier
                 if best is None or after > best[0]:
                     best = (after, dst)

@@ -17,6 +17,17 @@ a pooled page store + per-request block tables:
   is dry, the youngest request is evicted — its pages freed, its request
   requeued for recompute-style restart — so older requests always run to
   completion (no livelock, matching vLLM's LIFO recompute policy);
+- **shared-prefix KV reuse** (``prefix_cache=True``): finished prefills
+  register their full prompt pages in a
+  :class:`~repro.serving.prefix_cache.RadixPrefixIndex`; admission
+  longest-prefix-matches the incoming prompt, ``adopt``\\ s the cached
+  pages (refcount +1, zero copies) and starts chunked prefill after
+  them, so shared system prompts and repeated compound-app stages pay
+  prefill once per replica instead of once per request.  Writes into a
+  shared or indexed page copy-on-write first, refcount-0 prefix pages
+  are evicted LRU under memory pressure (before any live request is
+  preempted), and greedy decode output is token-for-token identical to
+  the cacheless engine;
 - **live migration** (Llumnix-style): a *decoding* request can be packed
   into a :class:`MigrationTicket` — its KV pages gathered to host memory,
   freed on the source — and resumed on a peer engine that allocates fresh
@@ -49,6 +60,7 @@ from ..models.paged import (
 )
 from .engine import LatencyProfileMixin, Request
 from .paged_cache import PageAllocator, TRASH_PAGE
+from .prefix_cache import RadixPrefixIndex
 
 
 def _bucket(b: int, cap: int) -> int:
@@ -93,6 +105,12 @@ class MigrationTicket:
     model : str
         Source engine's model-config name; replicas must match (live
         migration assumes identical weights on both ends).
+    page_refcounts : list of int, optional
+        Refcount of each exported page *at export time*, block-table
+        order.  Entries > 1 mean the page was a shared prefix page:
+        the source kept it alive for its co-owners (or its radix
+        index) and the ticket carries a private copy of its content.
+        ``None`` on tickets from engines without prefix caching.
     """
 
     req: Request
@@ -103,6 +121,7 @@ class MigrationTicket:
     page_size: int
     max_len: int
     model: str
+    page_refcounts: Optional[List[int]] = None
 
 
 class PagedLLMEngine(LatencyProfileMixin):
@@ -132,6 +151,12 @@ class PagedLLMEngine(LatencyProfileMixin):
         Greedy decoding (the only mode the engines currently use).
     prefill_chunk : int, optional
         Prompt tokens processed per engine step (chunked prefill).
+    prefix_cache : bool, optional
+        Enable shared-prefix KV reuse: a radix index over full prompt
+        pages, adopted copy-free at admission, with copy-on-write on
+        divergence and LRU eviction of dormant prefix pages under
+        pressure.  Off by default — the cacheless engine is the
+        byte-exact historical behaviour.
     """
 
     def __init__(
@@ -145,6 +170,7 @@ class PagedLLMEngine(LatencyProfileMixin):
         params: Optional[Any] = None,
         greedy: bool = True,
         prefill_chunk: int = 64,
+        prefix_cache: bool = False,
     ) -> None:
         if not supports_paged(cfg):
             raise ValueError(
@@ -184,6 +210,11 @@ class PagedLLMEngine(LatencyProfileMixin):
         self.preemptions = 0
         self.migrations_in = 0                     # requests imported live
         self.migrations_out = 0                    # requests exported live
+        self.prefix_index: Optional[RadixPrefixIndex] = (
+            RadixPrefixIndex(page_size) if prefix_cache else None
+        )
+        self.prefill_skipped_tokens = 0            # prompt tokens never re-run
+        self.cow_copies = 0                        # copy-on-write page copies
         self._admit_seq = 0
         self._row_seq: Dict[int, int] = {}
         self._init_latency()
@@ -198,6 +229,13 @@ class PagedLLMEngine(LatencyProfileMixin):
             donate_argnums=self._donate,
         )
         self._prefill_cache: Dict[int, Callable] = {}
+        # copy-on-write page duplication (src/dst traced: one compile)
+        self._copy_page_jit = jax.jit(
+            lambda blocks, src, dst: jax.tree.map(
+                lambda arr: arr.at[:, dst].set(arr[:, src]), blocks
+            ),
+            donate_argnums=(0,) if self._donate else (),
+        )
 
     # -- admission ----------------------------------------------------------
     @property
@@ -235,20 +273,54 @@ class PagedLLMEngine(LatencyProfileMixin):
         """
         return self.allocator.free_pages * self.page_size
 
+    @property
+    def reclaimable_token_capacity(self) -> int:
+        """Tokens of KV held by evictable (dormant) prefix pages.
+
+        Returns
+        -------
+        int
+            ``dormant_pages × page_size`` — headroom recoverable by LRU
+            prefix eviction before any live request must be preempted.
+        """
+        return self.allocator.dormant_pages * self.page_size
+
+    @property
+    def prefix_cached_tokens(self) -> Optional[int]:
+        """Reusable prefix tokens resident in the radix index.
+
+        This is the per-replica prefix-hit estimate surfaced to the
+        scheduler's cache-aware placement term.
+
+        Returns
+        -------
+        int or None
+            ``RadixPrefixIndex.cached_tokens``, or ``None`` when prefix
+            caching is disabled (so fleets without caches report no
+            cache signal at all and placement degenerates exactly).
+        """
+        if self.prefix_index is None:
+            return None
+        return self.prefix_index.cached_tokens
+
     def can_admit(self) -> bool:
         """Cheap admission pre-filter.
 
         Returns
         -------
         bool
-            True when a row is free, at least one page is free, and no
-            evicted request is waiting to re-enter.  :meth:`admit` may
-            still refuse a multi-page prompt — callers must handle that.
+            True when a row is free, at least one page is free or
+            reclaimable from the prefix cache, and no evicted request
+            is waiting to re-enter.  :meth:`admit` may still refuse a
+            multi-page prompt — callers must handle that.
         """
         return (
             not self.waiting
             and bool(self.free_rows)
-            and self.allocator.can_alloc(1)
+            and (
+                self.allocator.can_alloc(1)
+                or self.allocator.dormant_pages > 0
+            )
         )
 
     def admit(self, req: Request) -> bool:
@@ -275,19 +347,145 @@ class PagedLLMEngine(LatencyProfileMixin):
         plen = len(req.prompt)
         if plen + 1 > self.pages_per_seq * self.page_size:
             raise ValueError(f"prompt of {plen} tokens exceeds max_len")
-        need = self.allocator.pages_for(plen + 1)
-        if not self.free_rows or not self.allocator.can_alloc(need):
+        if not self.free_rows:
             return False
-        row = self.free_rows.pop(0)
-        pages = self.allocator.alloc(need, owner=row)
-        assert pages is not None
+        need = self.allocator.pages_for(plen + 1)
+        row = self.free_rows[0]
+        cached: List[int] = []
+        if self.prefix_index is not None:
+            cached = self.prefix_index.match(req.prompt)
+            if cached:
+                cached = self.allocator.adopt(cached, owner=row)
+        fresh = self._alloc(need - len(cached), owner=row)
+        if fresh is None:
+            # refusal must leave no partial state behind
+            if cached:
+                self.allocator.free(cached)
+            return False
+        self.free_rows.pop(0)
+        if self.prefix_index is not None:
+            self.prefix_index.record_hit(len(cached))
+        pages = cached + fresh
         self.seq_pages[row] = pages
         self.block_tables[row] = TRASH_PAGE
         self.block_tables[row, : len(pages)] = pages
         self.lengths[row] = 0
-        self.prefilling[row] = (req, 0)
+        # skip prefill over adopted pages, but always re-run at least the
+        # last prompt token: its logits seed the first decode step
+        start = min(len(cached) * self.page_size, plen - 1)
+        self.prefill_skipped_tokens += start
+        self.prefilling[row] = (req, start)
         self._admit_seq += 1
         self._row_seq[row] = self._admit_seq
+        return True
+
+    # -- page acquisition (prefix-cache aware) -------------------------------
+    def _alloc(self, n: int, owner: int) -> Optional[List[int]]:
+        """Allocate ``n`` fresh pages, reclaiming LRU prefix pages first.
+
+        Dormant (refcount-0, index-retained) pages are strictly cheaper
+        to sacrifice than any live request, so pressure always drains
+        the prefix cache before :meth:`_evict_for` considers victims.
+
+        Parameters
+        ----------
+        n : int
+            Page count (0 returns an empty list).
+        owner : int
+            Owner tag for the allocator.
+
+        Returns
+        -------
+        list of int or None
+            Fresh pages, or ``None`` when even reclaiming cannot
+            satisfy the request.
+        """
+        if n <= 0:
+            return []
+        pages = self.allocator.alloc(n, owner=owner)
+        if pages is None and self._reclaim_prefix(n):
+            pages = self.allocator.alloc(n, owner=owner)
+        return pages
+
+    def _reclaim_prefix(self, need_free: int) -> bool:
+        """Evict LRU dormant prefix pages until ``need_free`` are free.
+
+        Parameters
+        ----------
+        need_free : int
+            Target free-list size.
+
+        Returns
+        -------
+        bool
+            True when any page was reclaimed.
+        """
+        if self.prefix_index is None:
+            return False
+        want = need_free - self.allocator.free_pages
+        if want <= 0:
+            return False
+        evicted = self.prefix_index.evict(
+            want, lambda p: self.allocator.refcount(p) == 0
+        )
+        if not evicted:
+            return False
+        self.allocator.unmark_indexed(evicted)
+        return True
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        """Copy one physical page's K/V across every layer pool.
+
+        Runs through a jitted, pool-donating updater (page ids are
+        traced scalars, so one compilation serves every copy) — an
+        O(page) in-place scatter rather than O(pool) host-side array
+        rebuilds.
+        """
+        self.pools = {
+            "blocks": self._copy_page_jit(
+                self.pools["blocks"], jnp.int32(src), jnp.int32(dst)
+            )
+        }
+        self.cow_copies += 1
+
+    def _ensure_exclusive(self, row: int, pi: int) -> bool:
+        """Copy-on-write: make ``seq_pages[row][pi]`` safe to write.
+
+        A page is writable only when this row is its sole owner AND it
+        is not index-registered (an indexed page's content must keep
+        matching its token-block key).  Otherwise a fresh page is
+        allocated — evicting younger rows if the pool is dry — the
+        content copied, and this row's reference moved over.
+
+        Parameters
+        ----------
+        row : int
+            The writing sequence row.
+        pi : int
+            Logical page index within the row's block table.
+
+        Returns
+        -------
+        bool
+            False when ``row`` itself had to be evicted to find room.
+        """
+        pages = self.seq_pages[row]
+        if pi >= len(pages):
+            return True                     # not materialized yet (grow's job)
+        p = pages[pi]
+        a = self.allocator
+        if a.refcount(p) == 1 and not a.is_indexed(p):
+            return True
+        fresh = self._alloc(1, owner=row)
+        while fresh is None:
+            if not self._evict_for(row):
+                return False
+            fresh = self._alloc(1, owner=row)
+        q = fresh[0]
+        self._copy_page(p, q)
+        a.free([p])                          # drop our ref on the shared copy
+        pages[pi] = q
+        self.block_tables[row, pi] = q
         return True
 
     # -- eviction -----------------------------------------------------------
@@ -330,14 +528,16 @@ class PagedLLMEngine(LatencyProfileMixin):
         because the pool holds at least one full max_len sequence."""
         pi = int(self.lengths[row]) // self.page_size
         while pi >= len(self.seq_pages[row]):
-            pages = self.allocator.alloc(1, owner=row)
+            pages = self._alloc(1, owner=row)
             if pages is None:
                 if not self._evict_for(row):
                     return False
                 continue
             self.seq_pages[row].append(pages[0])
             self.block_tables[row, len(self.seq_pages[row]) - 1] = pages[0]
-        return True
+        # the write target must be exclusively ours (a page-aligned shared
+        # prompt can leave the boundary page adopted from the index)
+        return self._ensure_exclusive(row, pi)
 
     # -- prefill ------------------------------------------------------------
     def _prefill_fn(self, past: int) -> Callable:
@@ -355,25 +555,45 @@ class PagedLLMEngine(LatencyProfileMixin):
     def _run_prefill(self, budget: int) -> None:
         """Advance prompt processing by up to ``budget`` tokens.
 
-        A row's chunk is never truncated by leftover budget — chunks are
-        either full ``prefill_chunk`` or a prompt's final remainder, so
-        ``past`` offsets stay multiples of ``prefill_chunk`` and the jit
-        specializations stay bounded (per chunk index + per distinct
-        final-remainder length) instead of one per arbitrary offset.
+        A row's chunk is never truncated by leftover budget, and a row
+        resuming after a prefix-cache skip realigns to the chunk grid
+        with one short first chunk — so ``past`` offsets stay on the
+        same boundaries the cacheless engine uses (multiples of
+        ``prefill_chunk``, plus one page-aligned resume point per
+        distinct cached-prefix length).  That keeps jit specializations
+        bounded *and* makes the final chunk of a partially-cached
+        prompt bit-identical to the cacheless engine's final chunk,
+        which is what the token-for-token differential guarantee
+        rests on.
         """
+        ps = self.page_size
         for row in sorted(self.prefilling, key=lambda r: self._row_seq[r]):
             if budget <= 0:
                 break
+            if row not in self.prefilling:
+                continue  # evicted while an earlier row made room (CoW)
             req, pos = self.prefilling[row]
             plen = len(req.prompt)
-            chunk = min(self.prefill_chunk, plen - pos)
+            chunk = min(
+                self.prefill_chunk - pos % self.prefill_chunk, plen - pos
+            )
             if chunk > budget:
                 break
+            # copy-on-write before touching any shared/indexed page the
+            # chunk will scatter into (adopted page-aligned prefixes)
+            ok = True
+            for pi in range(pos // ps, (pos + chunk - 1) // ps + 1):
+                if not self._ensure_exclusive(row, pi):
+                    ok = False
+                    break
+            if not ok:
+                continue  # this row was evicted to make room; retry later
             toks = jnp.asarray([req.prompt[pos : pos + chunk]], jnp.int32)
             bt = jnp.asarray(self.block_tables[row], jnp.int32)
             logits, self.pools = self._prefill_fn(pos)(
                 self.params, self.pools, toks, bt
             )
+            req.prefill_tokens += chunk
             pos += chunk
             budget -= chunk
             if pos == plen:
@@ -384,8 +604,35 @@ class PagedLLMEngine(LatencyProfileMixin):
                 self.lengths[row] = plen
                 del self.prefilling[row]
                 self.active[row] = req
+                self._register_prefix(row, req)
             else:
                 self.prefilling[row] = (req, pos)
+
+    def _register_prefix(self, row: int, req: Request) -> None:
+        """Insert a finished prefill's full prompt pages into the index.
+
+        Only pages fully covered by prompt tokens are registered —
+        their content is immutable from here on (decode writes land in
+        later pages) — and only pages not already present under the
+        same token blocks (first writer wins).
+
+        Parameters
+        ----------
+        row : int
+            The row whose prefill just completed.
+        req : Request
+            Its request (source of the prompt tokens).
+        """
+        if self.prefix_index is None:
+            return
+        n_full = len(req.prompt) // self.page_size
+        if n_full == 0:
+            return
+        fresh = self.prefix_index.insert(
+            req.prompt, self.seq_pages[row][:n_full]
+        )
+        if fresh:
+            self.allocator.mark_indexed(fresh)
 
     # -- decode loop --------------------------------------------------------
     def step(self) -> List[Request]:
@@ -492,14 +739,16 @@ class PagedLLMEngine(LatencyProfileMixin):
         Returns
         -------
         bool
-            True when a sequence row is free, the allocator can hand
-            out ``n_pages`` at once, and the page count fits this
-            engine's ``pages_per_seq`` geometry.
+            True when a sequence row is free, the pool can hand out
+            ``n_pages`` at once (counting LRU-reclaimable dormant
+            prefix pages), and the page count fits this engine's
+            ``pages_per_seq`` geometry.
         """
         return (
             bool(self.free_rows)
             and n_pages <= self.pages_per_seq
-            and self.allocator.can_alloc(n_pages)
+            and n_pages
+            <= self.allocator.free_pages + self.allocator.dormant_pages
         )
 
     def export_request(self, row: int) -> MigrationTicket:
@@ -548,6 +797,10 @@ class PagedLLMEngine(LatencyProfileMixin):
             page_size=self.page_size,
             max_len=self.max_len,
             model=self.cfg.name,
+            # shared-page accounting: refcounts at export time (a value
+            # > 1 means the page stays alive on the source for its
+            # co-owners / prefix index; the ticket carries a copy)
+            page_refcounts=[self.allocator.refcount(p) for p in pages],
         )
         self._release_row(row)
         self.migrations_out += 1
@@ -600,7 +853,7 @@ class PagedLLMEngine(LatencyProfileMixin):
         if ticket.n_pages > self.pages_per_seq or not self.free_rows:
             return False
         row = self.free_rows[0]
-        pages = self.allocator.alloc(ticket.n_pages, owner=row)
+        pages = self._alloc(ticket.n_pages, owner=row)
         if pages is None:
             return False
         self.free_rows.pop(0)
@@ -625,15 +878,19 @@ class PagedLLMEngine(LatencyProfileMixin):
         self._admit_seq += 1
         self._row_seq[row] = self._admit_seq
         self.migrations_in += 1
+        # the imported KV's prompt pages are as reusable as a local
+        # prefill's: register them so peers of this replica hit too
+        self._register_prefix(row, ticket.req)
         return True
 
     # -- maintenance --------------------------------------------------------
     def defrag(self) -> int:
-        """Compact live pages onto the lowest physical ids.
+        """Compact content-bearing pages onto the lowest physical ids.
 
-        Permutes the KV pools and patches every live block table with
-        the allocator's old→new mapping, improving DMA locality after
-        heavy admission/eviction churn.
+        Permutes the KV pools and patches every live block table *and*
+        the prefix index with the allocator's old→new mapping (dormant
+        cached pages move too — their KV stays reusable), improving
+        DMA locality after heavy admission/eviction churn.
 
         Returns
         -------
@@ -655,4 +912,6 @@ class PagedLLMEngine(LatencyProfileMixin):
             self.seq_pages[row] = [mapping.get(p, p) for p in pages]
             self.block_tables[row] = TRASH_PAGE
             self.block_tables[row, : len(self.seq_pages[row])] = self.seq_pages[row]
+        if self.prefix_index is not None:
+            self.prefix_index.remap(mapping)
         return len(mapping)

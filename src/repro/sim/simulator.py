@@ -28,6 +28,14 @@ instead live-migrated to the replica with the most KV headroom, paying
 KV budgets, ``migrate=True`` falls back to batch-gap rebalancing.
 This lets fig7/fig9 sweep replica counts and migration on/off with the
 same cost mechanics the testbed measures for real.
+
+Shared-prefix reuse is mirrored too: with ``prompt_tokens_per_task``
+set, every LLM task pays modeled prefill work, and ``prefix_cache=True``
+lets a replica that already served the same application skip the shared
+system-prompt tokens (per-replica LRU residency, capacity-capped) —
+the discrete-event analog of the paged engines' radix prefix index.
+Per-job prefill token totals are recorded so the sim↔testbed parity
+canary can detect cache-model drift.
 """
 
 from __future__ import annotations
@@ -76,6 +84,9 @@ class SimResult:
     preemptions: int = 0
     reissues: int = 0
     migrations: int = 0  # cross-replica LLM-task moves (migrate=True)
+    prefill_tokens: float = 0.0        # modeled prompt tokens prefilled
+    prefill_saved_tokens: float = 0.0  # skipped via modeled prefix reuse
+    prefill_by_job: Dict[int, float] = field(default_factory=dict)
 
     @property
     def avg_jct(self) -> float:
@@ -122,6 +133,24 @@ class ClusterSim:
         behaviour.  With a budget, a replica whose running tasks'
         decoded tokens exceed it preempts (or, with ``migrate=True``,
         migrates away) its youngest task, mirroring the paged engine.
+    prompt_tokens_per_task : float, optional
+        When set, every LLM task pays this much prompt-prefill work
+        (charged as extra tokens decoded at the batch rate — the sim
+        analog of chunked prefill interleaving with decode).  ``None``
+        (default) keeps the historical decode-only model byte-for-byte.
+    shared_prompt_tokens : float, optional
+        Of ``prompt_tokens_per_task``, the tokens belonging to the
+        application's shared system prompt — the reusable part.
+    prefix_cache : bool, optional
+        Model shared-prefix KV reuse: a replica that already served a
+        task of the same application skips the shared prompt tokens
+        (the testbed's radix-index hit), tracked per replica with LRU
+        eviction under ``prefix_cache_capacity_tokens``.  Mirrors the
+        paged engine's prefix cache so fig-level sweeps and the
+        sim↔testbed parity canary agree on the savings model.
+    prefix_cache_capacity_tokens : float, optional
+        Per-replica cap on resident shared-prefix tokens; the least
+        recently used application's prefix is evicted beyond it.
     seed : int, optional
         RNG seed for fault/straggler injection.
     """
@@ -138,6 +167,10 @@ class ClusterSim:
         migrate: bool = False,
         migration_cost_s: float = 0.05,
         kv_budget_tokens=None,
+        prompt_tokens_per_task: Optional[float] = None,
+        shared_prompt_tokens: float = 0.0,
+        prefix_cache: bool = False,
+        prefix_cache_capacity_tokens: float = math.inf,
         seed: int = 0,
     ) -> None:
         self.scheduler = scheduler
@@ -173,6 +206,20 @@ class ClusterSim:
         # single tokens) and admission requires a reserve of headroom
         # (can_admit refuses when the pool is nearly dry) — both prevent
         # admit/evict churn storms around a saturated replica.
+        self.prompt_tokens_per_task = (
+            None if prompt_tokens_per_task is None
+            else float(prompt_tokens_per_task)
+        )
+        self.shared_prompt_tokens = float(shared_prompt_tokens)
+        self.prefix_cache = bool(prefix_cache)
+        self.prefix_cache_capacity_tokens = float(prefix_cache_capacity_tokens)
+        if (
+            self.prompt_tokens_per_task is not None
+            and self.shared_prompt_tokens > self.prompt_tokens_per_task
+        ):
+            raise ValueError(
+                "shared_prompt_tokens cannot exceed prompt_tokens_per_task"
+            )
         self.kv_relief_quantum = 64.0
         self.kv_admission_reserve = 256.0
         if self._kv is not None and any(
@@ -212,6 +259,42 @@ class ClusterSim:
         reg_running: List[Optional[Tuple[float, Task]]] = [None] * self.n_regular
         # LLM executors: running task lists
         llm_running: List[List[RunningLLMTask]] = [[] for _ in range(self.n_llm)]
+        # prefix-cache model: per-replica {app name -> last-use time} of
+        # resident shared prompts (the radix index's app-level analog)
+        pcache: List[Dict[str, float]] = [{} for _ in range(self.n_llm)]
+
+        def prefix_resident_tokens(e: int) -> int:
+            return int(len(pcache[e]) * self.shared_prompt_tokens)
+
+        def charge_prefill(e: int, task: Task) -> float:
+            """Prompt work (tokens) task pays when dispatched to ``e``.
+
+            A hit on the replica's resident shared prompt skips the
+            shared tokens; the residency is refreshed LRU-style and
+            capped by the capacity budget — mirroring the paged
+            engine's adopt / insert / LRU-evict cycle.
+            """
+            if self.prompt_tokens_per_task is None:
+                return 0.0
+            prefill = self.prompt_tokens_per_task
+            if self.prefix_cache and self.shared_prompt_tokens > 0:
+                app = job_by_id[task.job_id].app.name
+                cap = self.prefix_cache_capacity_tokens
+                if app in pcache[e]:
+                    prefill -= self.shared_prompt_tokens
+                    res.prefill_saved_tokens += self.shared_prompt_tokens
+                # a prefix only becomes (or stays) resident when it fits
+                # the capacity at all — a capacity-starved testbed
+                # replica cannot retain dormant pages either
+                if self.shared_prompt_tokens <= cap:
+                    pcache[e][app] = now
+                    while len(pcache[e]) * self.shared_prompt_tokens > cap:
+                        del pcache[e][min(pcache[e], key=pcache[e].get)]
+            res.prefill_tokens += prefill
+            res.prefill_by_job[task.job_id] = (
+                res.prefill_by_job.get(task.job_id, 0.0) + prefill
+            )
+            return prefill
 
         def llm_batch(e: int) -> int:
             return len(llm_running[e])
@@ -390,8 +473,15 @@ class ClusterSim:
                 job = job_by_id[t.job_id]
                 job.stages[t.stage_name].dispatched_tasks += 1
                 job.bump_evidence()  # running/unscheduled sets changed
+                # prompt prefill is charged as extra tokens at the batch
+                # rate (the chunked-prefill-interleaved-with-decode model)
+                prefill = charge_prefill(e, t)
                 llm_running[e].append(
-                    RunningLLMTask(task=t, remaining_tokens=float(t.out_tokens), executor=e)
+                    RunningLLMTask(
+                        task=t,
+                        remaining_tokens=float(t.out_tokens) + prefill,
+                        executor=e,
+                    )
                 )
                 did = True
             return did
@@ -437,6 +527,11 @@ class ClusterSim:
                         max(0, int(kv_headroom(e) or 0))
                         for e in range(self.n_llm)
                     ]
+                ),
+                llm_prefix_hit_tokens=(
+                    [prefix_resident_tokens(e) for e in range(self.n_llm)]
+                    if self.prefix_cache
+                    else None
                 ),
             )
             t0 = _time.perf_counter()

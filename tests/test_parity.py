@@ -1,12 +1,17 @@
-"""Sim ↔ testbed parity smoke test (calibration-drift canary).
+"""Sim ↔ testbed parity smoke tests (model-drift canaries).
 
 The same seeded job set runs through the event-driven simulator and the
 real paged-KV engine testbed under the same scheduler.  Absolute times
 differ (the simulator uses the analytic l(b), the testbed wall-clock on
-a smoke model), but the per-job JCT *ordering* must agree: a drift in
-rank correlation means the simulator's latency/batching model and the
-real engine have diverged, which silently invalidates every simulator
-figure.
+a smoke model), but the per-job *orderings* must agree:
+
+- JCT rank drift means the simulator's latency/batching model and the
+  real engine have diverged, silently invalidating every simulator
+  figure;
+- per-job **prefill-token** rank drift means the simulator's shared-
+  prefix cache model (app-keyed residency) and the testbed's radix
+  prefix index no longer describe the same savings, silently
+  invalidating every cache sweep.
 """
 
 import numpy as np
@@ -21,11 +26,17 @@ from repro.sim.simulator import ClusterSim
 
 def _spearman(x, y):
     def ranks(v):
-        order = np.argsort(v)
+        v = np.asarray(v, dtype=np.float64)
+        order = np.argsort(v, kind="stable")
         r = np.empty(len(v))
-        r[order] = np.arange(len(v))
+        r[order] = np.arange(len(v), dtype=np.float64)
+        # tie-average so integer-valued series (prefill counts) don't
+        # pick up spurious rank noise from argsort order
+        for val in np.unique(v):
+            mask = v == val
+            r[mask] = r[mask].mean()
         return r
-    rx, ry = ranks(np.asarray(x)), ranks(np.asarray(y))
+    rx, ry = ranks(x), ranks(y)
     rx -= rx.mean()
     ry -= ry.mean()
     denom = np.sqrt((rx ** 2).sum() * (ry ** 2).sum())
@@ -67,4 +78,48 @@ def test_sim_testbed_jct_rank_parity():
     assert rho > 0.5, (
         f"sim↔testbed JCT rank correlation collapsed: ρ={rho:.2f}\n"
         f"sim: {np.round(jct_sim, 2)}\ntestbed: {np.round(jct_tb, 2)}"
+    )
+
+
+@pytest.mark.slow
+def test_sim_testbed_prefill_token_rank_parity():
+    """Cache-model drift canary: with the prefix cache on in both
+    runtimes (same shared-prompt geometry), the per-job prefill token
+    totals must rank-agree — the sim's app-keyed residency model and
+    the testbed's radix index describe the same savings."""
+    n_jobs, seed, shared = 10, 5, 16   # shared prompt = 2 pages at ps=8
+    wl_sim = generate_workload("predefined", n_jobs, arrival_rate=1.5,
+                               seed=seed)
+    wl_tb = generate_workload("predefined", n_jobs, arrival_rate=1.5,
+                              seed=seed)
+
+    sim = ClusterSim(FCFS(), n_regular=3, n_llm=1, max_batch=4,
+                     prompt_tokens_per_task=float(shared + 2),
+                     shared_prompt_tokens=float(shared),
+                     prefix_cache=True, seed=0)
+    res_sim = sim.run(wl_sim)
+
+    cluster = ServingCluster(
+        FCFS(),
+        [PagedLLMEngine(get_smoke_config("stablelm_1_6b"), max_seqs=4,
+                        max_len=96, page_size=8, prefill_chunk=8, seed=0,
+                        prefix_cache=True)],
+        n_regular=3, token_scale=10.0, time_scale=10.0,
+        shared_prompt_tokens=shared,
+    )
+    res_tb = cluster.run(wl_tb)
+
+    # both runtimes actually hit their caches
+    assert res_sim.prefill_saved_tokens > 0
+    assert res_tb.prefill_saved_tokens > 0
+    assert set(res_sim.prefill_by_job) == {gj.job.job_id for gj in wl_sim}
+    assert set(res_tb.prefill_by_job) == {gj.job.job_id for gj in wl_tb}
+
+    pf_sim = [res_sim.prefill_by_job[gj.job.job_id] for gj in wl_sim]
+    pf_tb = [res_tb.prefill_by_job[gj.job.job_id] for gj in wl_tb]
+    rho = _spearman(pf_sim, pf_tb)
+    assert rho > 0.5, (
+        f"sim↔testbed prefill-token rank correlation collapsed: "
+        f"ρ={rho:.2f}\nsim: {np.round(pf_sim, 1)}\n"
+        f"testbed: {np.round(pf_tb, 1)}"
     )

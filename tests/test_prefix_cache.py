@@ -1,0 +1,561 @@
+"""Shared-prefix KV cache: allocator/index properties + differentials.
+
+Covers the prefix-sharing tentpole end to end:
+
+- **property test** (hypothesis): random interleaved
+  alloc/fork/free/index/adopt/evict/defrag sequences never leak, never
+  double free, and every page's allocator refcount always equals the
+  number of live model owners (``check_no_leaks`` extended to
+  refcounted + dormant pages);
+- **differential tests**: greedy decode through the prefix-cache
+  engine is token-for-token identical to the cacheless engine on the
+  same seeded trace — including under forced mid-decode eviction and
+  under forced migration of a request holding shared pages;
+- **golden-trajectory regression**: with prefix info absent *or*
+  zeroed, LLMSched decisions on the seeded fig7-style trace are
+  byte-identical to the pre-prefix-cache (PR 4) outputs;
+- radix-index unit behaviour (longest-prefix match, first-writer-wins
+  insert, LRU leaf eviction, defrag remap) and the engine's LRU
+  reclaim-before-preempt policy.
+"""
+
+import hashlib
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.core import LLMSched, ProfileStore
+from repro.models import init_params
+from repro.serving import (
+    PageAllocator,
+    PagedLLMEngine,
+    RadixPrefixIndex,
+    Request,
+    migrate_request,
+)
+from repro.sim import generate_traces, generate_workload, get_generators
+from repro.sim.simulator import ClusterSim
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("stablelm_1_6b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.key(0))[0]
+
+
+# ---------------------------------------------------------------------------
+# radix index unit behaviour
+# ---------------------------------------------------------------------------
+def test_radix_match_insert_first_writer_wins():
+    idx = RadixPrefixIndex(page_size=4)
+    toks = list(range(1, 13))                       # 3 full blocks
+    assert idx.match(toks) == []
+    assert idx.insert(toks, [5, 6, 7]) == [5, 6, 7]
+    assert idx.cached_pages == 3 and idx.cached_tokens == 12
+    # longest-prefix semantics: a diverging third block matches 2 pages
+    other = toks[:8] + [99, 98, 97, 96]
+    assert idx.match(other) == [5, 6]
+    # same blocks re-inserted under different pages: first writer wins
+    assert idx.insert(toks, [8, 9, 10]) == []
+    assert idx.match(toks) == [5, 6, 7]
+    # partial blocks never participate
+    assert idx.match(toks[:7]) == [5]
+    assert idx.insert([1, 2, 3], [11]) == []        # < one full block
+
+
+def test_radix_lru_leaf_eviction_and_remap():
+    idx = RadixPrefixIndex(page_size=2)
+    idx.insert([1, 2, 3, 4], [5, 6])                # chain 5 -> 6
+    idx.insert([9, 9], [7])                         # separate leaf 7
+    idx.match([1, 2, 3, 4])                         # chain is now MRU
+    # only leaves are evictable, LRU first: 7 before 6, never 5 before 6
+    assert idx.evict(1, lambda p: True) == [7]
+    assert idx.evict(2, lambda p: True) == [6, 5]
+    assert idx.cached_pages == 0
+    # evictability filter respects live pages
+    idx.insert([1, 2, 3, 4], [5, 6])
+    assert idx.evict(2, lambda p: p != 6) == []     # leaf 6 pinned
+    idx.remap({5: 1, 6: 2})
+    assert idx.match([1, 2, 3, 4]) == [1, 2]
+
+
+# ---------------------------------------------------------------------------
+# allocator refcount / CoW-fork unit behaviour
+# ---------------------------------------------------------------------------
+def test_allocator_fork_refcounts_and_double_free():
+    a = PageAllocator(num_pages=8, page_size=4)
+    p = a.alloc(2, owner=1)
+    assert [a.refcount(x) for x in p] == [1, 1]
+    q = a.fork(p, owner=2)
+    assert q == p and [a.refcount(x) for x in p] == [2, 2]
+    a.free(p)                                       # owner 1 drops out
+    assert [a.refcount(x) for x in p] == [1, 1]
+    with pytest.raises(AssertionError):
+        a.check_no_leaks()                          # owner 2 still holds
+    a.free(q)
+    a.check_no_leaks()
+    with pytest.raises(ValueError):
+        a.free(q)                                   # double free detected
+    with pytest.raises(ValueError):
+        a.fork([p[0]])                              # forking a dead page
+    # duplicate ids within ONE call must also raise before mutating
+    r = a.alloc(1, owner=3)
+    with pytest.raises(ValueError):
+        a.free([r[0], r[0]])
+    assert a.refcount(r[0]) == 1                    # state untouched
+    a.free(r)
+    a.check_no_leaks()
+
+
+def test_allocator_dormant_lifecycle():
+    a = PageAllocator(num_pages=6, page_size=4)
+    p = a.alloc(3, owner=1)
+    a.mark_indexed(p[:2])
+    a.free(p)
+    # 2 dormant (indexed) + 1 freed outright
+    assert a.dormant_pages == 2 and a.free_pages == 3
+    a.check_no_leaks()                              # dormant is not a leak
+    with pytest.raises(AssertionError):
+        a.check_no_leaks(allow_indexed=False)
+    # adopt revives a dormant page at refcount 1
+    got = a.adopt([p[0]], owner=7)
+    assert got == [p[0]] and a.refcount(p[0]) == 1
+    with pytest.raises(ValueError):
+        a.adopt([p[2]])                             # never indexed
+    a.free(got)
+    a.unmark_indexed(p[:2])                         # index eviction
+    assert a.dormant_pages == 0 and a.free_pages == 5
+    a.check_no_leaks(allow_indexed=False)
+
+
+# ---------------------------------------------------------------------------
+# property test: interleaved alloc/fork/free/index/adopt/evict/defrag
+# ---------------------------------------------------------------------------
+def _interp(ops, num_pages, page_size=4):
+    """Drive allocator+index from an op stream, mirroring refcounts in a
+    model; verifies after every op that allocator refcounts equal the
+    model's live-owner counts and that free/live/dormant partition the
+    pool."""
+    a = PageAllocator(num_pages, page_size)
+    idx = RadixPrefixIndex(page_size)
+    model = {}                     # page -> expected refcount
+    seqs = {}                      # seq id -> page list
+    registry = []                  # (tokens, pages) inserted into the index
+    next_seq, next_block = 0, 0
+
+    def check():
+        for p in range(1, num_pages):
+            assert a.refcount(p) == model.get(p, 0), (
+                f"page {p}: allocator ref {a.refcount(p)} != "
+                f"model {model.get(p, 0)}"
+            )
+        assert a.used_pages == sum(1 for v in model.values() if v > 0)
+        assert a.free_pages + a.used_pages + a.dormant_pages == num_pages - 1
+
+    for x in ops:
+        op, arg = x % 6, x // 6
+        if op == 0:                                   # alloc a new sequence
+            n = 1 + arg % 3
+            pages = a.alloc(n, owner=next_seq)
+            if pages is not None:
+                assert all(model.get(p, 0) == 0 for p in pages)
+                for p in pages:
+                    model[p] = 1
+                seqs[next_seq] = pages
+                next_seq += 1
+        elif op == 1 and seqs:                        # CoW-fork a sequence
+            sid = sorted(seqs)[arg % len(seqs)]
+            pages = a.fork(seqs[sid], owner=next_seq)
+            for p in pages:
+                model[p] += 1
+            seqs[next_seq] = list(pages)
+            next_seq += 1
+        elif op == 2 and seqs:                        # free a sequence
+            sid = sorted(seqs)[arg % len(seqs)]
+            pages = seqs.pop(sid)
+            a.free(pages)
+            for p in pages:
+                model[p] -= 1
+                if model[p] == 0:
+                    del model[p]  # freed ids get recycled by defrag
+        elif op == 3 and seqs:                        # index + release
+            sid = sorted(seqs)[arg % len(seqs)]
+            pages = seqs[sid]
+            if not any(a.is_indexed(p) for p in pages):
+                tokens = []
+                for _ in pages:
+                    tokens.extend([next_block] * page_size)
+                    next_block += 1
+                fresh = idx.insert(tokens, pages)
+                assert fresh == pages                 # all blocks were new
+                a.mark_indexed(fresh)
+                registry.append((tokens, list(pages)))
+                a.free(seqs.pop(sid))
+                for p in pages:
+                    model[p] -= 1
+                    if model[p] == 0:
+                        del model[p]  # page may live on as dormant
+        elif op == 4 and registry:                    # adopt a cached prefix
+            tokens, pages = registry[arg % len(registry)]
+            got = idx.match(tokens)
+            assert got == pages[: len(got)]           # eviction keeps prefixes
+            if got:
+                a.adopt(got, owner=next_seq)
+                for p in got:
+                    model[p] = model.get(p, 0) + 1
+                seqs[next_seq] = list(got)
+                next_seq += 1
+        elif op == 5:                                 # evict LRU + defrag
+            evicted = idx.evict(1 + arg % 3, lambda p: a.refcount(p) == 0)
+            assert all(model.get(p, 0) == 0 for p in evicted)
+            a.unmark_indexed(evicted)
+            mapping = a.defrag()
+            if mapping:
+                idx.remap(mapping)
+                model = {mapping.get(p, p): r for p, r in model.items()}
+                for s, pl in seqs.items():
+                    seqs[s] = [mapping.get(p, p) for p in pl]
+                registry = [
+                    (t, [mapping.get(p, p) for p in pl])
+                    for t, pl in registry
+                ]
+        check()
+    return a, idx, model, seqs
+
+
+def _interp_and_teardown(ops, num_pages):
+    a, idx, model, seqs = _interp(ops, num_pages)
+    # drain: free every live sequence, then drop the index entirely
+    for sid in sorted(seqs):
+        a.free(seqs[sid])
+    a.check_no_leaks()                                # dormant pages allowed
+    a.unmark_indexed(idx.drop())
+    a.check_no_leaks(allow_indexed=False)             # now fully clean
+
+
+@given(
+    ops=st.lists(st.integers(0, 2 ** 16), min_size=1, max_size=120),
+    num_pages=st.integers(4, 24),
+)
+@settings(max_examples=30, deadline=None)
+def test_refcount_property_fast(ops, num_pages):
+    """Tier-1 slice of the property sweep: no leaks, no double frees,
+    refcounts always equal the number of live owners."""
+    _interp_and_teardown(ops, num_pages)
+
+
+@pytest.mark.slow
+@given(
+    ops=st.lists(st.integers(0, 2 ** 16), min_size=1, max_size=400),
+    num_pages=st.integers(4, 48),
+)
+@settings(max_examples=300, deadline=None)
+def test_refcount_property_sweep(ops, num_pages):
+    """Nightly sweep: longer op streams, bigger pools, more examples."""
+    _interp_and_teardown(ops, num_pages)
+
+
+# ---------------------------------------------------------------------------
+# differential: prefix-cache engine == cacheless engine, token for token
+# ---------------------------------------------------------------------------
+def _run_trace(cfg, params, prompts, *, prefix, n_new=8, chunk=8, ps=8,
+               pages=None, max_seqs=8, stagger=2, max_steps=600):
+    """Drive one engine over a staggered arrival trace; return outputs."""
+    eng = PagedLLMEngine(cfg, max_seqs=max_seqs, max_len=64, page_size=ps,
+                         params=params, prefill_chunk=chunk,
+                         num_pages=pages, prefix_cache=prefix)
+    out = {}
+    reqs = [
+        Request(rid=i, prompt=list(p), max_new_tokens=n_new,
+                on_finish=lambda r: out.__setitem__(r.rid, list(r.out_tokens)))
+        for i, p in enumerate(prompts)
+    ]
+    pending = list(reqs)
+    steps = 0
+    while (pending or eng.batch_size or eng.waiting) and steps < max_steps:
+        if pending and steps % stagger == 0 and eng.can_admit() \
+                and eng.admit(pending[0]):
+            pending.pop(0)
+        eng.step()
+        steps += 1
+    assert not pending and not eng.batch_size and not eng.waiting, (
+        f"trace did not drain in {max_steps} steps"
+    )
+    eng.allocator.check_no_leaks()
+    return out, eng, reqs
+
+
+def test_differential_shared_prompt_trace(cfg, params):
+    """Seeded shared-prefix trace (suffix variants + exact page-aligned
+    duplicates): greedy outputs must match the cacheless engine exactly,
+    while the cache engine really hits (and CoWs the aligned case)."""
+    shared = [3 + (7 * i) % 29 for i in range(32)]   # 4 pages at ps=8
+    prompts = (
+        [shared + [50 + i] for i in range(4)]        # shared + 1-token suffix
+        + [shared, shared]                           # aligned duplicates
+        + [[70, 71, 72]]                             # unrelated short prompt
+    )
+    base, _, base_reqs = _run_trace(cfg, params, prompts, prefix=False)
+    got, eng, reqs = _run_trace(cfg, params, prompts, prefix=True)
+    assert got == base
+    assert eng.prefix_index.hits > 0
+    assert eng.prefill_skipped_tokens > 0
+    assert eng.cow_copies > 0                        # aligned dup re-runs tail
+    # exact accounting (no evictions here): prefilled + skipped covers
+    # every prompt token, and the cacheless run prefilled them all
+    total = sum(len(p) for p in prompts)
+    assert sum(r.prefill_tokens for r in base_reqs) == total
+    assert sum(r.prefill_tokens for r in reqs) \
+        + eng.prefill_skipped_tokens == total
+    assert sum(r.prefill_tokens for r in reqs) < total
+
+
+def test_differential_under_forced_eviction(cfg, params):
+    """Pool far too small for the offered load: the cache engine must
+    evict (preemptions > 0, possibly dropping dormant prefix pages) and
+    still reproduce the cacheless outputs token for token."""
+    shared = [3 + (5 * i) % 23 for i in range(16)]
+    prompts = [shared + [40 + i] for i in range(6)]
+    base, e0, _ = _run_trace(cfg, params, prompts, prefix=False,
+                             n_new=14, pages=12, max_seqs=4)
+    got, e1, _ = _run_trace(cfg, params, prompts, prefix=True,
+                            n_new=14, pages=12, max_seqs=4)
+    assert got == base
+    assert e1.preemptions > 0                        # eviction really forced
+    assert e1.prefix_index.hits > 0
+
+
+def test_prefix_pages_reclaimed_before_preemption(cfg, params):
+    """Dormant prefix pages are strictly cheaper than live requests:
+    filling the pool with dead cached prefixes must not block a new
+    admission — the index LRU-evicts instead of refusing."""
+    eng = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                         num_pages=9, params=params, prefill_chunk=8,
+                         prefix_cache=True)
+    done = []
+    # two requests with disjoint 2-page prompts; run each to completion
+    # so their prompt pages go dormant in the index
+    for i, base in enumerate((10, 40)):
+        assert eng.admit(Request(rid=i, prompt=[base + k for k in range(16)],
+                                 max_new_tokens=2,
+                                 on_finish=lambda r: done.append(r.rid)))
+        while eng.batch_size:
+            eng.step()
+    assert sorted(done) == [0, 1]
+    assert eng.allocator.dormant_pages == 4          # 2 prompts x 2 pages
+    assert eng.allocator.free_pages == 4             # 8 usable - 4 dormant
+    # a 41-token prompt needs 6 pages: only reclaiming the dormant
+    # prefixes can satisfy it, and nobody may be preempted for it
+    big = [70 + k for k in range(41)]
+    assert eng.admit(Request(rid=9, prompt=big, max_new_tokens=2,
+                             on_finish=lambda r: done.append(r.rid)))
+    assert eng.prefix_index.evictions > 0            # LRU reclaim fired
+    while eng.batch_size or eng.waiting:
+        eng.step()
+    assert 9 in done
+    assert eng.preemptions == 0                      # nobody was preempted
+    eng.allocator.check_no_leaks()
+
+
+def test_refused_admissions_do_not_inflate_hit_stats(cfg, params):
+    """A matching request that cannot be admitted (fresh pages
+    unavailable, its own adopted prefix protected from reclaim) must
+    not count as a cache hit, however often the runtime retries."""
+    eng = PagedLLMEngine(cfg, max_seqs=3, max_len=64, page_size=8,
+                         num_pages=9, params=params, prefill_chunk=8,
+                         prefix_cache=True)
+    done = []
+    first = [10 + k for k in range(16)]              # 2 full pages
+    assert eng.admit(Request(rid=0, prompt=first, max_new_tokens=2,
+                             on_finish=lambda r: done.append(r.rid)))
+    while eng.batch_size:
+        eng.step()
+    assert done == [0] and eng.allocator.dormant_pages == 2
+    # a long-running request eats most of the free list
+    assert eng.admit(Request(rid=1, prompt=[60 + k for k in range(33)],
+                             max_new_tokens=4,
+                             on_finish=lambda r: done.append(r.rid)))
+    # rid 2 shares rid 0's prefix but needs 2 fresh pages; only 1 free
+    blocked = Request(rid=2, prompt=first + [90 + k for k in range(8)],
+                      max_new_tokens=2, on_finish=lambda r: done.append(r.rid))
+    for _ in range(3):
+        assert not eng.admit(blocked)                # retried and refused
+    assert eng.prefix_index.hits == 0                # no phantom hits
+    assert eng.prefill_skipped_tokens == 0
+    while eng.batch_size:                            # drain rid 1
+        eng.step()
+    assert eng.admit(blocked)
+    assert eng.prefix_index.hits == 1                # counted exactly once
+    assert eng.prefill_skipped_tokens == 16
+    while eng.batch_size:
+        eng.step()
+    assert sorted(done) == [0, 1, 2]
+    eng.allocator.check_no_leaks()
+
+
+def test_differential_under_forced_migration_with_shared_pages(cfg, params):
+    """Two requests sharing 2 prefix pages; migrate the younger one
+    (refcount-2 pages in its block table) mid-decode to a peer replica:
+    the ticket carries the shared-page refcounts, both engines stay
+    leak-free, and the decode continues token-for-token."""
+    shared = [3 + i for i in range(16)]              # 2 pages at ps=8
+    p0, p1 = shared + [60], shared + [61]
+
+    # cacheless single-engine reference
+    base, _, _ = _run_trace(cfg, params, [p0, p1], prefix=False, n_new=10,
+                            stagger=6)
+
+    a = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                       params=params, prefill_chunk=8, prefix_cache=True)
+    b = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                       params=params, prefill_chunk=8, prefix_cache=True)
+    out = {}
+
+    def collect(r):
+        out[r.rid] = list(r.out_tokens)
+
+    assert a.admit(Request(rid=0, prompt=p0, max_new_tokens=10,
+                           on_finish=collect))
+    for _ in range(6):                               # finish prefill, decode
+        a.step()
+    assert a.admit(Request(rid=1, prompt=p1, max_new_tokens=10,
+                           on_finish=collect))       # hits the shared prefix
+    for _ in range(4):
+        a.step()
+    row = a.youngest_active_row()
+    assert row is not None and a.active[row].rid == 1
+    shared_refs = [a.allocator.refcount(p) for p in a.seq_pages[row]]
+    assert max(shared_refs) > 1                      # genuinely shared pages
+
+    # export/import directly so the ticket's refcounts are observable
+    ticket = a.export_request(row)
+    assert ticket.page_refcounts is not None
+    assert max(ticket.page_refcounts) > 1            # carried shared counts
+    assert b.import_request(ticket)
+    while a.batch_size or b.batch_size:
+        if a.batch_size:
+            a.step()
+        if b.batch_size:
+            b.step()
+    assert out == base                               # token-for-token
+    a.allocator.check_no_leaks()
+    b.allocator.check_no_leaks()
+    # the migrated prompt's prefix is now reusable on the destination too
+    assert b.prefix_index.cached_pages >= 2
+
+
+def test_migrate_request_roundtrip_with_shared_pages(cfg, params):
+    """The policy-level wrapper moves a shared-prefix holder losslessly
+    (the source keeps the shared pages alive for its co-owner)."""
+    shared = [5 + i for i in range(16)]
+    a = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                       params=params, prefill_chunk=8, prefix_cache=True)
+    b = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                       params=params, prefill_chunk=8, prefix_cache=True)
+    done = []
+    a.admit(Request(rid=0, prompt=shared + [90], max_new_tokens=12,
+                    on_finish=lambda r: done.append(r.rid)))
+    for _ in range(6):
+        a.step()
+    a.admit(Request(rid=1, prompt=shared + [91], max_new_tokens=12,
+                    on_finish=lambda r: done.append(r.rid)))
+    for _ in range(4):
+        a.step()
+    row = a.youngest_active_row()
+    assert migrate_request(a, b, row)
+    while a.batch_size or a.waiting or b.batch_size:
+        for e in (a, b):
+            if e.batch_size or e.waiting:
+                e.step()
+    assert sorted(done) == [0, 1]
+    a.allocator.check_no_leaks()
+    b.allocator.check_no_leaks()
+
+
+# ---------------------------------------------------------------------------
+# golden-trajectory regression: placement degeneracy vs PR 4
+# ---------------------------------------------------------------------------
+# SHA-256 of the (job-index-normalized) LLMSched decision stream on the
+# seeded fig7-style trace, captured at the PR 4 commit (before any
+# prefix-cache code existed).  The cache-aware scheduler must reproduce
+# these exactly whenever prefix info is absent — or present but zeroed.
+_GOLD = {
+    "no_kv": ("f0a1535da4df96f382ac82bd79543816d4647d2041c61866eec03a6ea89c2ee2",
+              185, 34.531148),
+    "kv": ("76ff31e613e53efc6b261452a5a0936094c42b7280ea999d343e3a670e88322a",
+           196, 39.830019),
+}
+
+
+def _trajectory(kv, zero_prefix):
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 120, seed=7))
+    sched = LLMSched(store, epsilon=0.2, seed=0)
+    wl = generate_workload("mixed", 20, arrival_rate=1.2, seed=11)
+    jid = {gj.job.job_id: i for i, gj in enumerate(wl)}
+    log = []
+    orig = sched.schedule
+
+    def rec(jobs, view):
+        if zero_prefix:
+            view.llm_prefix_hit_tokens = [0] * len(view.llm_loads)
+        dec = orig(jobs, view)
+        log.append((
+            tuple((jid[t.job_id], t.stage_name, t.index) for t in dec.regular),
+            tuple((jid[t.job_id], t.stage_name, t.index) for t in dec.llm),
+            tuple(sorted(
+                (jid[j], s, i, e) for (j, s, i), e in dec.placement.items()
+            )),
+        ))
+        return dec
+
+    sched.schedule = rec
+    sim = ClusterSim(sched, n_regular=4, n_llm=2, max_batch=8,
+                     kv_budget_tokens=kv, seed=0)
+    res = sim.run(wl)
+    return (hashlib.sha256(repr(log).encode()).hexdigest(), len(log),
+            round(res.avg_jct, 6))
+
+
+@pytest.mark.parametrize("tag,kv", [("no_kv", None), ("kv", [3000, 8000])])
+def test_placement_degenerates_to_pr4_golden_trajectory(tag, kv):
+    """Absent and zeroed prefix info must both reproduce the PR 4
+    decision stream byte-for-byte on the seeded fig7 trace."""
+    absent = _trajectory(kv, zero_prefix=False)
+    zeroed = _trajectory(kv, zero_prefix=True)
+    assert absent == zeroed                 # exact degeneracy, any platform
+    assert absent == _GOLD[tag], (
+        f"LLMSched {tag} trajectory drifted from the PR 4 golden capture: "
+        f"{absent} != {_GOLD[tag]}"
+    )
+
+
+def test_cache_aware_placement_prefers_resident_prefix():
+    """With nonzero prefix residency the score must actually steer:
+    equal load and KV, one replica holding the shared prompt -> that
+    replica wins the placement."""
+    from repro.core.scheduler import ClusterView
+
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 100, seed=7))
+    wl = generate_workload("mixed", 6, seed=9)
+    jobs = [gj.job for gj in wl]
+    sched = LLMSched(store, epsilon=0.0, seed=0)
+    view = ClusterView(
+        now=0.0, free_regular=4,
+        llm_loads=[(0, 8), (0, 8)],
+        llm_free_tokens=[4096, 4096],
+        llm_prefix_hit_tokens=[0, 512],
+    )
+    dec = sched.schedule(jobs, view)
+    assert dec.llm
+    first = dec.replica_for(dec.llm[0])
+    assert first == 1                       # cache affinity broke the tie

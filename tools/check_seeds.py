@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Benchmark seed audit (stdlib-only; runs offline).
+
+Every benchmark script must thread an **explicit seed** into each
+randomness source it touches, so artifacts are reproducible and two
+modes of one comparison (cache off/on, migration off/on) see the same
+trace.  This audit parses the given files (default: ``benchmarks/*.py``)
+and fails when:
+
+- ``generate_workload`` / ``generate_traces`` / ``simulate`` is called
+  without a ``seed=`` keyword (or a 4th positional for the generators);
+- ``numpy.random.default_rng`` is called with no argument (an OS-seeded
+  RNG makes the run unreproducible);
+- ``jax.random.key`` / ``jax.random.PRNGKey`` is called with no
+  argument (cannot happen legally, but guards refactors);
+- a bare ``random.random()`` / ``np.random.<dist>()`` module-level RNG
+  is used at all (the global RNG's state is shared and unseedable per
+  call site).
+
+Usage: python tools/check_seeds.py [FILE ...]
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+# calls that must carry an explicit seed argument
+SEED_KW_FUNCS = {"generate_workload", "generate_traces", "simulate"}
+# positional index at which the generators accept seed
+SEED_POS = {"generate_workload": 3, "generate_traces": 2}
+# calls that must receive at least one (seed) argument
+NONEMPTY_FUNCS = {"default_rng", "key", "PRNGKey"}
+# module-level global-RNG attributes that are banned outright
+BANNED_NP_RANDOM = {
+    "rand", "randn", "randint", "random", "choice", "shuffle",
+    "permutation", "uniform", "normal", "exponential", "poisson",
+}
+
+
+def _call_name(node: ast.Call) -> str:
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return ""
+
+
+def _attr_chain(node: ast.AST) -> list:
+    out = []
+    while isinstance(node, ast.Attribute):
+        out.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        out.append(node.id)
+    return list(reversed(out))
+
+
+def check_file(path: Path) -> list:
+    """Return ``(lineno, message)`` seed violations for one file."""
+    tree = ast.parse(path.read_text(), filename=str(path))
+    bad = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _call_name(node)
+        kwargs = {kw.arg for kw in node.keywords}
+        if name in SEED_KW_FUNCS:
+            has_kw = "seed" in kwargs or None in kwargs  # None: **kw splat
+            has_pos = len(node.args) > SEED_POS.get(name, 99)
+            if not (has_kw or has_pos):
+                bad.append(
+                    (node.lineno, f"{name}(...) without an explicit seed")
+                )
+        elif name in NONEMPTY_FUNCS:
+            chain = _attr_chain(node.func)
+            # attribute calls must come off a `random` module; bare
+            # names (``from numpy.random import default_rng``) count
+            # too when the name is unambiguous (`key` alone is not)
+            if isinstance(node.func, ast.Attribute):
+                relevant = "random" in chain
+            else:
+                relevant = name in ("default_rng", "PRNGKey")
+            if relevant and not node.args and not node.keywords:
+                bad.append(
+                    (node.lineno, f"{'.'.join(chain)}() without a seed")
+                )
+        elif isinstance(node.func, ast.Attribute):
+            chain = _attr_chain(node.func)
+            if (
+                len(chain) >= 3
+                and chain[0] in ("np", "numpy")
+                and chain[1] == "random"
+                and chain[2] in BANNED_NP_RANDOM
+            ):
+                bad.append(
+                    (node.lineno,
+                     f"global RNG {'.'.join(chain)}() — use "
+                     "default_rng(seed) instead")
+                )
+    return bad
+
+
+def main(argv: list) -> int:
+    """CLI entry point; returns a non-zero status on violations."""
+    paths = [Path(a) for a in argv] or sorted(
+        Path(__file__).resolve().parent.parent.glob("benchmarks/*.py")
+    )
+    failed = False
+    for path in paths:
+        for lineno, msg in check_file(path):
+            print(f"{path}:{lineno}: {msg}")
+            failed = True
+    if failed:
+        print("\nseed audit FAILED — thread an explicit seed (see module "
+              "docstring)")
+        return 1
+    print(f"seed audit OK ({len(paths)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -45,8 +45,16 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core import LLMSched
 from repro.models import init_params
-from repro.serving import LLMEngine, PagedLLMEngine, Request, ServingCluster
+from repro.serving import (
+    LLMEngine,
+    PagedLLMEngine,
+    Request,
+    ServeConfig,
+    ServingCluster,
+    build_engines,
+)
 from repro.sim import generate_workload
+from repro.sim.workloads import generate_tiered_workload
 
 from .common import emit_csv, schedulers_for, store_for
 
@@ -421,9 +429,12 @@ def prefix_cache(
 
 
 def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11,
-         include_artifacts: bool = True) -> dict:
+         include_artifacts: bool = True, slo: bool = False) -> dict:
     t0 = time.time()
     cfg = get_smoke_config("stablelm_1_6b")
+    serve_cfg = ServeConfig(engine="slot", replicas=1, max_batch=4,
+                            max_len=96, n_regular=4,
+                            token_scale=24.0, time_scale=24.0, seed=0)
     rows = []
     results = {}
     for mix in mixes:
@@ -434,18 +445,23 @@ def main(mixes=("planning", "chain"), jobs: int = 14, seed: int = 11,
             "llmsched": LLMSched(store, epsilon=0.2, seed=0),
         }
         for name, sched in scheds.items():
-            engines = [LLMEngine(cfg, max_batch=4, max_len=96, seed=0)]
-            cluster = ServingCluster(sched, engines, n_regular=4,
-                                     token_scale=24.0, time_scale=24.0)
-            wl = generate_workload(mix, jobs, arrival_rate=0.9, seed=seed)
+            engines = build_engines(cfg, serve_cfg)
+            cluster = ServingCluster(sched, engines, serve_cfg)
+            if slo:
+                wl = generate_tiered_workload(mix, jobs, arrival_rate=0.9,
+                                              seed=seed)
+            else:
+                wl = generate_workload(mix, jobs, arrival_rate=0.9, seed=seed)
             r = cluster.run(wl)
             results[(mix, name)] = r
+            g = r.goodput()
             rows.append([mix, name, round(r.avg_jct, 2), len(r.jcts),
-                         r.tokens_generated, round(r.avg_overhead_ms, 2)])
+                         r.tokens_generated, round(r.avg_overhead_ms, 2),
+                         "-" if g is None else round(g, 3)])
     emit_csv(
         "fig8_testbed (real engines; scaled tokens)",
         ["workload", "scheduler", "avg_jct_s", "jobs", "tokens",
-         "sched_overhead_ms"],
+         "sched_overhead_ms", "goodput"],
         rows,
     )
     if include_artifacts:
@@ -467,6 +483,9 @@ if __name__ == "__main__":
     )
     ap.add_argument("--seed", type=int, default=None,
                     help="trace seed (defaults to each mode's seeded value)")
+    ap.add_argument("--slo", action="store_true",
+                    help="attach tiered SLOs to the scheduler-table "
+                         "workloads and report goodput")
     args = ap.parse_args()
     seed_kw = {} if args.seed is None else {"seed": args.seed}
     if args.mode == "multi_replica":
@@ -476,6 +495,6 @@ if __name__ == "__main__":
     elif args.mode == "prefix_cache":
         prefix_cache(**seed_kw)
     elif args.mode == "schedulers":
-        main(include_artifacts=False, **seed_kw)
+        main(include_artifacts=False, slo=args.slo, **seed_kw)
     else:
-        main(**seed_kw)
+        main(slo=args.slo, **seed_kw)

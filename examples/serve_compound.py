@@ -5,6 +5,9 @@ stablelm-family model) serves compound LLM jobs whose admission order is
 decided by LLMSched; compare against FCFS on the same workload, with
 both the slot-based and the paged KV-cache engine.
 
+All fleet/runtime knobs travel in one frozen ``repro.serving.ServeConfig``
+consumed by ``build_engines`` and ``ServingCluster``.
+
 Multi-replica mode: ``--replicas N`` spins up N paged engines sharing
 one set of weights (replica 0 gets a deliberately small page pool so KV
 pressure is visible), and ``--migrate`` turns on Llumnix-style live
@@ -17,38 +20,42 @@ Run:
 
 import argparse
 
-import jax
-
 from repro.configs import get_smoke_config
 from repro.core import FCFS, LLMSched, ProfileStore
-from repro.models import init_params
-from repro.serving import LLMEngine, PagedLLMEngine, ServingCluster
+from repro.serving import ServeConfig, ServingCluster, build_engines
 from repro.sim import generate_traces, generate_workload, get_generators
 
 
-def build_engines(cfg, engine: str, replicas: int, seed: int = 0):
-    """Build the fleet; multi-replica fleets share weights (migratable)."""
-    if engine == "paged":
-        params = init_params(cfg, jax.random.key(seed))[0]
-        # replica 0 slightly starved when there are peers to flee to
-        return [
-            PagedLLMEngine(cfg, max_seqs=8, max_len=96, page_size=16,
-                           num_pages=(13 if (i == 0 and replicas > 1)
-                                      else None),
-                           params=params)
-            for i in range(replicas)
-        ]
-    return [LLMEngine(cfg, max_batch=4, max_len=96, seed=seed + i)
-            for i in range(replicas)]
+def config_for(engine: str, replicas: int, migrate: bool) -> ServeConfig:
+    """Fleet shape for this demo; replica 0 of a multi-replica paged
+    fleet gets a deliberately small page pool so KV pressure (and the
+    value of migration) is visible."""
+    kv_pages = None
+    if engine == "paged" and replicas > 1:
+        # None entries are not expressible in ServeConfig.kv_pages (it
+        # pins every pool); starve replica 0, default-size the rest
+        kv_pages = tuple([13] + [49] * (replicas - 1))
+    return ServeConfig(
+        engine=engine,
+        replicas=replicas,
+        max_batch=8 if engine == "paged" else 4,
+        max_len=96,
+        page_size=16,
+        kv_pages=kv_pages,
+        migrate=migrate,
+        n_regular=4,
+        token_scale=24.0,
+        time_scale=24.0,
+        seed=0,
+    )
 
 
-def run_one(name, sched, wl, cfg, engine="slot", replicas=1, migrate=False):
-    engines = build_engines(cfg, engine, replicas)
-    cluster = ServingCluster(sched, engines, n_regular=4,
-                             token_scale=24.0, time_scale=24.0,
-                             migrate=migrate)
+def run_one(name, sched, wl, cfg, serve_cfg: ServeConfig):
+    engines = build_engines(cfg, serve_cfg)
+    cluster = ServingCluster(sched, engines, serve_cfg)
     res = cluster.run(wl)
-    print(f"{name:10s} engine={engine:5s} replicas={replicas} "
+    print(f"{name:10s} engine={serve_cfg.engine:5s} "
+          f"replicas={serve_cfg.replicas} "
           f"avg_jct={res.avg_jct:6.2f}s jobs={len(res.jcts)} "
           f"tokens={res.tokens_generated} "
           f"sched_overhead={res.avg_overhead_ms:.2f}ms "
@@ -73,24 +80,25 @@ def main() -> None:
 
     if args.replicas > 1:
         # multi-replica paged fleet: llmsched vs fcfs, migration per flag
+        serve_cfg = config_for("paged", args.replicas, args.migrate)
         for name, sched in [
             ("llmsched", LLMSched(store, epsilon=0.2, seed=0)),
             ("fcfs", FCFS()),
         ]:
             wl = generate_workload("planning", args.jobs, arrival_rate=0.9,
                                    seed=11)
-            run_one(name, sched, wl, cfg, engine="paged",
-                    replicas=args.replicas, migrate=args.migrate)
+            run_one(name, sched, wl, cfg, serve_cfg)
         return
 
     for engine in ("slot", "paged"):
+        serve_cfg = config_for(engine, 1, migrate=False)
         for name, sched in [
             ("llmsched", LLMSched(store, epsilon=0.2, seed=0)),
             ("fcfs", FCFS()),
         ]:
             wl = generate_workload("planning", args.jobs, arrival_rate=0.9,
                                    seed=11)
-            run_one(name, sched, wl, cfg, engine=engine)
+            run_one(name, sched, wl, cfg, serve_cfg)
 
 
 if __name__ == "__main__":

@@ -10,6 +10,8 @@
 """
 
 from .dag import (
+    SLO,
+    SLO_TIERS,
     ApplicationTemplate,
     Job,
     Stage,
@@ -28,19 +30,29 @@ from .entropy import (
     entropy,
     uncertainty_reduction,
 )
+from .metrics import RunMetrics
 from .profiler import AppProfile, JobTrace, ProfileStore
-from .scheduler import ClusterView, Decision, LLMSched, Scheduler
+from .scheduler import (
+    ClusterView,
+    Decision,
+    LLMSched,
+    Scheduler,
+    TaskKey,
+    task_key,
+)
 from .baselines import FCFS, SJF, SRTF, Argus, Carbyne, Decima, Fair, make_baselines
 
 __all__ = [
+    "SLO", "SLO_TIERS",
     "ApplicationTemplate", "Job", "Stage", "StageTemplate", "StageType",
     "Task", "TaskState", "make_job",
     "BayesNet", "Discretizer", "Factor", "fit_discretizer",
     "LatencyProfile", "measured_profile", "roofline_profile",
     "binary_entropy", "conditional_mutual_information",
     "dynamic_stage_entropy", "entropy", "uncertainty_reduction",
-    "AppProfile", "JobTrace", "ProfileStore",
+    "AppProfile", "JobTrace", "ProfileStore", "RunMetrics",
     "ClusterView", "Decision", "LLMSched", "Scheduler",
+    "TaskKey", "task_key",
     "FCFS", "SJF", "SRTF", "Argus", "Carbyne", "Decima", "Fair",
     "make_baselines",
 ]

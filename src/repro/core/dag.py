@@ -29,6 +29,40 @@ class StageType(enum.Enum):
     DYNAMIC = "dynamic"
 
 
+#: Recognized SLO tiers, strictest first.  ``interactive`` jobs are
+#: deadline-boosted whenever their deadline falls inside the scheduler's
+#: plan-ahead window; ``batch`` jobs only once their worst-case duration
+#: bound projects a miss; ``best_effort`` jobs are never boosted (their
+#: deadline only matters for goodput accounting and infeasibility
+#: demotion).
+SLO_TIERS = ("interactive", "batch", "best_effort")
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Service-level objective attached to a :class:`Job`.
+
+    Attributes
+    ----------
+    tier : str
+        One of :data:`SLO_TIERS` — controls how aggressively the
+        scheduler boosts the job as its deadline approaches.
+    deadline : float
+        Absolute completion deadline in workload seconds (same clock as
+        ``Job.arrival_time``).  A job *meets* its SLO when
+        ``finish_time <= deadline``.
+    """
+
+    tier: str
+    deadline: float
+
+    def __post_init__(self) -> None:
+        if self.tier not in SLO_TIERS:
+            raise ValueError(
+                f"unknown SLO tier {self.tier!r}; expected one of {SLO_TIERS}"
+            )
+
+
 @dataclass
 class StageTemplate:
     """Static description of a stage inside an application template."""
@@ -214,6 +248,11 @@ class Job:
     extra_parents: Dict[str, List[str]] = field(default_factory=dict)
     # trigger stage name -> stage names whose existence it reveals (chains)
     reveal_rules: Dict[str, List[str]] = field(default_factory=dict)
+    # Optional service-level objective (tier + absolute deadline).  None
+    # (default) keeps the job deadline-blind: SLO-aware schedulers must
+    # emit byte-identical decisions for workloads where every job is
+    # SLO-less (golden-trajectory guarded).
+    slo: Optional[SLO] = None
     finish_time: float = -1.0
     # Monotonic counter bumped by the runtime on every event that changes
     # this job's *observable* state (task dispatch/completion, stage
@@ -270,6 +309,20 @@ class Job:
 
     def jct(self) -> float:
         return self.finish_time - self.arrival_time
+
+    def met_slo(self, time_scale: float = 1.0) -> Optional[bool]:
+        """Whether the finished job met its deadline.
+
+        ``time_scale`` maps workload-clock deadlines onto a compressed
+        runtime clock (the testbed divides arrivals by its time scale);
+        the simulator uses the workload clock directly (scale 1).
+        Returns ``None`` for SLO-less jobs.
+        """
+        if self.slo is None:
+            return None
+        return self.finish_time >= 0 and (
+            self.finish_time <= self.slo.deadline / time_scale
+        )
 
     # -- observable state for the scheduler --------------------------------
     def completed_durations(self) -> Dict[str, float]:

@@ -25,7 +25,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .calibration import LatencyProfile
-from .dag import Job, Stage, StageType, Task
+from .dag import SLO_TIERS, Job, Stage, StageType, Task
 from .profiler import ProfileStore
 
 # Key type of Decision.placement: (job_id, stage_name, task index).
@@ -126,6 +126,64 @@ class ClusterView:
         b, mb = min(self.llm_loads, key=lambda t: t[0])
         return min(b + 1, mb)
 
+    @classmethod
+    def assemble(
+        cls,
+        now: float,
+        free_regular: int,
+        llm_loads: Sequence[Tuple[int, int]],
+        latency_profile: Optional[LatencyProfile] = None,
+        llm_free_tokens: Optional[Sequence[Optional[int]]] = None,
+        llm_prefix_hit_tokens: Optional[Sequence[Optional[int]]] = None,
+    ) -> "ClusterView":
+        """Build a view — the single construction point for both runtimes.
+
+        ``ServingCluster`` and ``ClusterSim`` used to assemble the field
+        list by hand, which is how optional per-replica fields can
+        silently drift between the two.  This helper owns the shared
+        gating rule: an optional per-replica list containing *any*
+        ``None`` entry (some replica cannot report the signal) collapses
+        to ``None`` for the whole fleet, so schedulers never see a
+        partially-populated signal.
+
+        Parameters
+        ----------
+        now : float
+            Current runtime time in seconds.
+        free_regular : int
+            Idle regular-executor slots.
+        llm_loads : sequence of (int, int)
+            Per-replica ``(batch, max_batch)``.
+        latency_profile : LatencyProfile, optional
+            Measured/modeled ``l(b)``.
+        llm_free_tokens : sequence of int or None, optional
+            Per-replica free KV tokens (entries may be ``None``).
+        llm_prefix_hit_tokens : sequence of int or None, optional
+            Per-replica resident prefix tokens (entries may be ``None``).
+
+        Returns
+        -------
+        ClusterView
+            The gated, fully-constructed view.
+        """
+
+        def gate(vals):
+            if vals is None:
+                return None
+            vals = list(vals)
+            if any(v is None for v in vals):
+                return None
+            return vals
+
+        return cls(
+            now=now,
+            free_regular=free_regular,
+            llm_loads=list(llm_loads),
+            latency_profile=latency_profile,
+            llm_free_tokens=gate(llm_free_tokens),
+            llm_prefix_hit_tokens=gate(llm_prefix_hit_tokens),
+        )
+
 
 @dataclass
 class Decision:
@@ -176,6 +234,28 @@ class Decision:
             place this task (caller should use its own fallback).
         """
         return self.placement.get(task_key(task))
+
+
+@dataclass
+class _SloPlan:
+    """One job's plan-ahead snapshot, pinned to an evidence version.
+
+    The calibrated remaining-duration bounds are frozen when the plan is
+    made; only the runtime clock advances against them between evidence
+    events.  Slack therefore shrinks *monotonically* on static evidence,
+    which is what makes retraction convergent (a job can move toward
+    urgent/infeasible as time passes but never oscillate back without a
+    new-evidence bump).
+    """
+
+    version: int          # Job.evidence_version the bounds were cached at
+    calib: Tuple          # calibration signature (profile epoch, b_t)
+    lo_raw: float         # batch-1 optimistic remaining duration (s) —
+                          # the true best case, used for the provable-miss
+                          # (infeasibility) test so batching slowdown can
+                          # never falsely condemn a winnable job
+    lo_cal: float         # calibrated optimistic remaining duration (s)
+    hi_cal: float         # calibrated pessimistic remaining duration (s)
 
 
 class Scheduler:
@@ -256,6 +336,33 @@ class LLMSched(Scheduler):
     heterogeneous ``max_batch`` fleets — preserving the historical
     dispatcher behaviour byte-for-byte.
 
+    SLO-tiered deadline scheduling: jobs carrying a
+    :class:`repro.core.dag.SLO` are scheduled against their absolute
+    deadline with three mechanisms (all inert — byte-identical decisions
+    — when no job in the system carries an SLO):
+
+    - **plan-ahead** — each SLO job's remaining-duration bounds
+      (``AppProfile.job_bounds``, cached per evidence version) are
+      calibrated by the measured ``l(b)`` latency model and projected
+      against its deadline over the next ``plan_ahead_s`` seconds;
+    - **deadline-miss-aware ordering** — provably infeasible jobs (the
+      *optimistic* bound already overshoots the deadline) are demoted
+      below all feasible work so they stop claiming KV pages first;
+      tight-slack ``interactive`` jobs whose deadline falls inside the
+      window are boosted ahead of the SRTF order (EDF among
+      themselves), and ``batch`` jobs are boosted only once their
+      *pessimistic* bound projects a miss; ``best_effort`` jobs are
+      never boosted.  Placement still uses the uncertainty/KV score —
+      boosted jobs simply reserve headroom first, and demoted jobs are
+      left unplaced (no KV reservation);
+    - **retraction** — the plan snapshot is pinned per
+      ``Job.evidence_version``: when the runtime bumps a job's version
+      (stage completion, reveal, dispatch), the queued-but-undispatched
+      plan is *retracted* and rebuilt from the tightened bounds
+      (``retractions`` counts these).  Running tasks are never
+      retracted — preference lists only ever contain pending tasks, so
+      token-equality and migration invariants are untouched.
+
     Parameters
     ----------
     profiles : ProfileStore
@@ -270,6 +377,15 @@ class LLMSched(Scheduler):
         Seed of the exploration RNG.
     incremental : bool, optional
         Enable cross-round caching keyed by ``Job.evidence_version``.
+    plan_ahead_s : float, optional
+        Plan-ahead window W in seconds: only deadlines within
+        ``now + W`` can trigger an urgency boost.  Infeasibility
+        demotion applies regardless of the window.
+    slo_aware : bool, optional
+        Gate the SLO machinery entirely.  ``False`` makes the scheduler
+        deadline-blind even on SLO-carrying workloads (identical
+        decisions to an SLO-less run) — the ablation baseline the
+        goodput benchmark compares against.
     """
 
     name = "llmsched"
@@ -293,13 +409,25 @@ class LLMSched(Scheduler):
         use_bn: bool = True,
         seed: int = 0,
         incremental: bool = True,
+        plan_ahead_s: float = 30.0,
+        slo_aware: bool = True,
     ) -> None:
         self.profiles = profiles
         self.epsilon = float(epsilon)
         self.sampling_ratio = float(sampling_ratio)
         self.use_bn = use_bn
         self.incremental = bool(incremental)
+        self.plan_ahead_s = float(plan_ahead_s)
+        self.slo_aware = bool(slo_aware)
         self.rng = np.random.default_rng(seed)
+        # SLO plan-ahead state: per-job plan snapshots pinned to the
+        # job's evidence version (see _SloPlan), plus public counters.
+        self._slo_plans: Dict[int, _SloPlan] = {}
+        self._demoted: set = set()
+        #: queued plans revisited after an evidence/calibration change
+        self.retractions = 0
+        #: jobs newly classified provably deadline-infeasible
+        self.demotions = 0
         # caches invalidated per-call; uncertainty scores are reused across
         # ε draws within one invocation.
         self._ur_cache: Dict[Tuple[int, str], float] = {}
@@ -476,14 +604,9 @@ class LLMSched(Scheduler):
             j.job_id: self._ready_stages(j) for j in jobs
         }
 
-        # lines 1-4: S_t — ready stages in SRTF order of their job
-        j_t = sorted(jobs, key=lambda j: (self.est_rd(j, view), j.arrival_time))
-        s_t: List[Stage] = []
-        for job in j_t:
-            s_t.extend(ready[job.job_id])
-
-        # lines 5-10: S_u — stages by uncertainty reduction within
-        # non-overlapping job groups (bounds gathered into numpy arrays)
+        # per-job remaining-duration bounds (Algorithm 1 line 5; also the
+        # SLO plan-ahead input).  Cached per evidence version, so hoisting
+        # the computation above the SRTF sort changes nothing numerically.
         n = len(jobs)
         los = np.empty(n, dtype=np.float64)
         his = np.empty(n, dtype=np.float64)
@@ -496,6 +619,22 @@ class LLMSched(Scheduler):
             )
             los[i] = lo
             his[i] = hi
+
+        # lines 1-4: S_t — ready stages in SRTF order of their job;
+        # SLO-aware deadline ordering reshuffles the *job* order (boost /
+        # demote) only when at least one job actually carries an SLO —
+        # SLO-less workloads keep the historical order byte-for-byte.
+        j_t = sorted(jobs, key=lambda j: (self.est_rd(j, view), j.arrival_time))
+        if self.slo_aware and any(j.slo is not None for j in jobs):
+            j_t = self._slo_order(j_t, view, dict(zip(
+                (j.job_id for j in jobs), zip(los, his)
+            )))
+        s_t: List[Stage] = []
+        for job in j_t:
+            s_t.extend(ready[job.job_id])
+
+        # lines 5-10: S_u — stages by uncertainty reduction within
+        # non-overlapping job groups (bounds gathered into numpy arrays)
         s_u: List[Stage] = []
         for group in self._group_by_overlap(los, his, list(jobs)):
             # only genuinely uncertainty-reducing stages are exploration
@@ -516,6 +655,137 @@ class LLMSched(Scheduler):
         # proxy (same arrays that drove the grouping above)
         self._place_llm(dec, view, self._job_uncertainty(jobs, los, his))
         return dec
+
+    # -- SLO plan-ahead / retraction ----------------------------------------
+    def _slo_plan_for(
+        self, job: Job, view: ClusterView, lo: float, hi: float
+    ) -> _SloPlan:
+        """Return the job's plan snapshot, retracting a stale one.
+
+        The snapshot pins the calibrated duration bounds to the job's
+        current ``evidence_version`` and calibration context.  A cached
+        plan made under an older version (or a different measured
+        ``l(b)`` epoch / target batch) is *retracted*: the queued
+        decision it backed is revisited with fresh bounds.  Running
+        tasks are untouched — plans only shape the ordering of pending
+        tasks.
+
+        Parameters
+        ----------
+        job : Job
+            An unfinished job carrying an SLO.
+        view : ClusterView
+            Supplies the l(b) calibration context.
+        lo, hi : float
+            Raw (batch-1) remaining-duration bounds from the profile.
+
+        Returns
+        -------
+        _SloPlan
+            The current (possibly freshly rebuilt) snapshot.
+        """
+        sig = self._calib_sig(view)
+        plan = self._slo_plans.get(job.job_id)
+        if (
+            plan is not None
+            and plan.version == job.evidence_version
+            and plan.calib == sig
+        ):
+            return plan
+        if plan is not None:
+            self.retractions += 1
+        prof = view.latency_profile
+        stretch = (
+            prof.calibrate(1.0, b_r=1, b_t=view.target_batch())
+            if prof is not None
+            else 1.0
+        )
+        plan = _SloPlan(
+            version=job.evidence_version,
+            calib=sig,
+            lo_raw=lo,
+            lo_cal=lo * stretch,
+            hi_cal=hi * stretch,
+        )
+        self._slo_plans[job.job_id] = plan
+        return plan
+
+    def _slo_order(
+        self,
+        j_t: List[Job],
+        view: ClusterView,
+        bounds: Dict[int, Tuple[float, float]],
+    ) -> List[Job]:
+        """Deadline-aware reorder of the SRTF job list (boost / demote).
+
+        Three buckets, each preserving SRTF order internally unless
+        stated: **urgent** SLO jobs — deadline inside the plan-ahead
+        window AND at risk (the calibrated pessimistic bound projects a
+        miss); interactive/batch only, never best-effort — move to the
+        front in (tier, pessimistic-slack, deadline) order.  Jobs with
+        comfortable slack stay in SRTF order even inside the window, so
+        deadline pressure perturbs the JCT-optimal order no more than
+        necessary.  **Infeasible** jobs (the *batch-1 optimistic* bound
+        already overshoots the deadline — a provable miss even in the
+        best case) move behind all feasible work; everything else keeps
+        its SRTF position.
+
+        Parameters
+        ----------
+        j_t : list of Job
+            Jobs in SRTF order (the historical ordering).
+        view : ClusterView
+            Supplies ``now`` and the calibration context.
+        bounds : dict
+            ``job_id → (lo, hi)`` raw remaining-duration bounds.
+
+        Returns
+        -------
+        list of Job
+            The reordered job list.
+        """
+        now = view.now
+        window_end = now + self.plan_ahead_s
+        urgent: List[Tuple[int, float, float, float, Job]] = []
+        normal: List[Job] = []
+        infeasible: List[Job] = []
+        demoted_now: set = set()
+        for job in j_t:
+            slo = job.slo
+            if slo is None:
+                normal.append(job)
+                continue
+            lo, hi = bounds[job.job_id]
+            plan = self._slo_plan_for(job, view, lo, hi)
+            remaining = slo.deadline - now
+            if plan.lo_raw > remaining:
+                # provable miss: even the batch-1 optimistic bound
+                # overshoots — stop spending prime capacity (and KV
+                # pages) on it
+                demoted_now.add(job.job_id)
+                if job.job_id not in self._demoted:
+                    self.demotions += 1
+                infeasible.append(job)
+                continue
+            at_risk = plan.hi_cal > remaining
+            boost = (
+                slo.deadline <= window_end
+                and at_risk
+                and slo.tier != "best_effort"
+            )
+            if boost:
+                urgent.append((
+                    SLO_TIERS.index(slo.tier),
+                    remaining - plan.hi_cal,   # pessimistic slack
+                    slo.deadline,
+                    job.arrival_time,
+                    job,
+                ))
+            else:
+                normal.append(job)
+        urgent.sort(key=lambda t: t[:4])
+        self._demoted = demoted_now
+        return [t[4] for t in urgent] + normal + infeasible
 
     @staticmethod
     def _job_uncertainty(
@@ -568,6 +838,11 @@ class LLMSched(Scheduler):
             else [0.0] * n
         )
         for t in dec.llm:
+            if t.job_id in self._demoted:
+                # provably deadline-infeasible: runs only on leftover
+                # capacity — reserve no KV headroom for it (the set is
+                # empty for SLO-less workloads, keeping this a no-op)
+                continue
             u = uncertainty.get(t.job_id, 0.5)
             w = 0.25 + 0.5 * u
             best = None
@@ -616,6 +891,8 @@ class LLMSched(Scheduler):
             Completion time (unused; interface parity).
         """
         self._ready_cache.pop(job.job_id, None)
+        self._slo_plans.pop(job.job_id, None)
+        self._demoted.discard(job.job_id)
         p = self.profiles.get(job.app.name)
         if p is not None:
             p.forget_job(job.job_id)

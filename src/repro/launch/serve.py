@@ -33,55 +33,49 @@ from __future__ import annotations
 
 import argparse
 
-import jax
-
 from repro.configs import get_smoke_config
 from repro.core import LLMSched, ProfileStore, make_baselines
-from repro.models import init_params
-from repro.serving import LLMEngine, PagedLLMEngine, ServingCluster
+from repro.serving import ServeConfig, ServingCluster, build_engines
 
 from repro.sim import generate_traces, generate_workload, get_generators
+from repro.sim.workloads import generate_tiered_workload
 
 
-def build_scheduler(name: str, store: ProfileStore, epsilon: float, seed: int):
+def build_scheduler(name: str, store: ProfileStore, epsilon: float, seed: int,
+                    plan_ahead_s: float = 30.0):
     """Instantiate LLMSched or a named baseline scheduler."""
     if name == "llmsched":
-        return LLMSched(store, epsilon=epsilon, seed=seed)
+        return LLMSched(store, epsilon=epsilon, seed=seed,
+                        plan_ahead_s=plan_ahead_s)
     return make_baselines(store)[name]
 
 
-def build_engines(args, cfg):
-    """Build the replica fleet: shared weights, optional heterogeneous KV."""
+def config_from_args(args) -> ServeConfig:
+    """Map the CLI namespace onto a validated :class:`ServeConfig`."""
+    kv_pages = None
     n = args.replicas if args.replicas is not None else args.engines
-    if args.engine == "paged":
-        params = init_params(cfg, jax.random.key(args.seed))[0]
-        kv_pages = None
-        if args.kv_pages:
-            kv_pages = [int(x) for x in args.kv_pages.split(",")]
-            if len(kv_pages) != n:
-                raise SystemExit(
-                    f"--kv-pages needs {n} comma-separated values, "
-                    f"got {len(kv_pages)}"
-                )
-        return [
-            PagedLLMEngine(
-                cfg, max_seqs=args.max_batch, max_len=96,
-                page_size=args.page_size,
-                num_pages=kv_pages[i] if kv_pages else None,
-                params=params,
-                prefix_cache=args.prefix_cache,
-            )
-            for i in range(n)
-        ]
-    if args.migrate:
-        raise SystemExit("--migrate requires --engine paged")
-    if args.prefix_cache:
-        raise SystemExit("--prefix-cache requires --engine paged")
-    return [
-        LLMEngine(cfg, max_batch=args.max_batch, max_len=96,
-                  seed=args.seed + i)
-        for i in range(n)
-    ]
+    if args.kv_pages:
+        kv_pages = tuple(int(x) for x in args.kv_pages.split(","))
+    try:
+        return ServeConfig(
+            engine=args.engine,
+            replicas=n,
+            max_batch=args.max_batch,
+            max_len=96,
+            page_size=args.page_size,
+            kv_pages=kv_pages,
+            migrate=args.migrate,
+            prefix_cache=args.prefix_cache,
+            shared_prompt_tokens=args.shared_prompt,
+            n_regular=args.regular,
+            token_scale=args.token_scale,
+            time_scale=args.token_scale,
+            seed=args.seed,
+            plan_ahead_s=args.plan_ahead,
+            slo_tightness=args.slo_tightness,
+        )
+    except ValueError as e:
+        raise SystemExit(str(e))
 
 
 def main(argv=None) -> int:
@@ -117,32 +111,48 @@ def main(argv=None) -> int:
     ap.add_argument("--epsilon", type=float, default=0.2)
     ap.add_argument("--token-scale", type=float, default=20.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo", action="store_true",
+                    help="attach tiered SLOs (interactive/batch/best-effort "
+                         "deadlines) to every job and report goodput")
+    ap.add_argument("--slo-tightness", type=float, default=1.0,
+                    help="deadline-tightening factor for --slo workloads")
+    ap.add_argument("--plan-ahead", type=float, default=30.0,
+                    help="LLMSched SLO plan-ahead window W in workload "
+                         "seconds")
     args = ap.parse_args(argv)
 
-    # engines are built with max_len=96; the synthesized prompt is
-    # shared + 2 suffix tokens and needs one decode slot on top
-    if args.shared_prompt > 93:
-        raise SystemExit(
-            f"--shared-prompt {args.shared_prompt} too large: the "
-            "synthesized prompt (+2 suffix tokens) must fit the "
-            "engines' max_len of 96"
-        )
+    serve_cfg = config_from_args(args)
 
     gens = get_generators()
     apps = [g.template for g in gens.values()]
     store = ProfileStore().fit(apps, generate_traces(args.mix, 300, seed=7))
 
     cfg = get_smoke_config(args.arch)
-    engines = build_engines(args, cfg)
-    sched = build_scheduler(args.scheduler, store, args.epsilon, args.seed)
-    cluster = ServingCluster(
-        sched, engines, n_regular=args.regular,
-        token_scale=args.token_scale, time_scale=args.token_scale,
-        migrate=args.migrate,
-        shared_prompt_tokens=args.shared_prompt,
-    )
-    wl = generate_workload(args.mix, args.jobs, arrival_rate=0.9, seed=args.seed)
+    try:
+        engines = build_engines(cfg, serve_cfg)
+    except ValueError as e:
+        raise SystemExit(str(e))
+    sched = build_scheduler(args.scheduler, store, args.epsilon, args.seed,
+                            plan_ahead_s=serve_cfg.plan_ahead_s)
+    cluster = ServingCluster(sched, engines, serve_cfg)
+    if args.slo:
+        wl = generate_tiered_workload(
+            args.mix, args.jobs, arrival_rate=0.9, seed=args.seed,
+            tightness=serve_cfg.slo_tightness,
+        )
+    else:
+        wl = generate_workload(args.mix, args.jobs, arrival_rate=0.9,
+                               seed=args.seed)
     res = cluster.run(wl)
+    goodput = res.goodput()
+    slo_part = (
+        "" if goodput is None
+        else f" goodput={goodput:.2f}"
+        + "".join(
+            f" goodput[{t}]={g:.2f}"
+            for t, g in sorted(res.goodput_by_tier().items())
+        )
+    )
     print(
         f"[serve] scheduler={args.scheduler} mix={args.mix} "
         f"replicas={len(engines)} jobs={len(res.jcts)} "
@@ -150,6 +160,7 @@ def main(argv=None) -> int:
         f"tokens={res.tokens_generated} overhead={res.avg_overhead_ms:.2f}ms "
         f"preemptions={res.preemptions} migrations={res.migrations} "
         f"prefill={res.prefill_tokens} prefill_saved={res.prefill_saved_tokens}"
+        f"{slo_part}"
     )
     return 0
 

@@ -12,6 +12,7 @@ decoding requests (KV pages and all, via :class:`MigrationTicket`) off
 KV-starved replicas onto peers with headroom.
 """
 
+from .config import ServeConfig, build_engines
 from .engine import LLMEngine, Request
 from .paged_cache import PageAllocator, TRASH_PAGE
 from .prefix_cache import RadixPrefixIndex
@@ -22,5 +23,5 @@ from .cluster import ServingCluster, TestbedResult
 __all__ = [
     "LLMEngine", "PagedLLMEngine", "Request", "PageAllocator", "TRASH_PAGE",
     "RadixPrefixIndex", "MigrationTicket", "Rebalancer", "migrate_request",
-    "ServingCluster", "TestbedResult",
+    "ServeConfig", "ServingCluster", "TestbedResult", "build_engines",
 ]

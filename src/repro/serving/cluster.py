@@ -27,79 +27,23 @@ sim↔testbed cache-model parity canary.
 
 from __future__ import annotations
 
+import math
 import time
+import warnings
 import zlib
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import List, Optional, Sequence, Tuple
 
 from ..core.dag import Job, Stage, Task, TaskState
+from ..core.metrics import RunMetrics
 from ..core.scheduler import ClusterView, Decision, Scheduler
 from ..sim.workloads import GeneratedJob, get_generators, reveal_after_stage
+from .config import ServeConfig
 from .engine import LLMEngine, Request
 from .migration import Rebalancer
 
-
-@dataclass
-class TestbedResult:
-    """Aggregate outcome of one :meth:`ServingCluster.run`.
-
-    Attributes
-    ----------
-    jcts : list of float
-        Per-job completion times (finish − scaled arrival), seconds.
-    jct_by_job : dict
-        ``job_id → JCT`` for cross-run rank comparisons.
-    sched_overhead_s : list of float
-        Wall seconds spent inside ``scheduler.schedule`` per round.
-    makespan : float
-        Total wall seconds from start to last completion.
-    tokens_generated : int
-        Decoded tokens across all engines.
-    preemptions : int
-        Paged-engine evictions (pages freed + recompute requeue).
-    migrations : int
-        Live cross-replica migrations performed by the rebalancer.
-    prefill_tokens : int
-        Prompt tokens actually run through prefill across all engines
-        (prefix-cache hits skip tokens and so reduce this).
-    prefill_saved_tokens : int
-        Prompt tokens skipped thanks to shared-prefix KV reuse.
-    prefill_by_job : dict
-        ``job_id → prefilled tokens`` for cross-runtime cache-model
-        rank comparisons (sim ↔ testbed parity).
-    """
-
-    jcts: List[float] = field(default_factory=list)
-    jct_by_job: Dict[int, float] = field(default_factory=dict)
-    sched_overhead_s: List[float] = field(default_factory=list)
-    makespan: float = 0.0
-    tokens_generated: int = 0
-    preemptions: int = 0  # paged-engine evictions (pages freed + requeue)
-    migrations: int = 0   # live cross-replica KV handoffs
-    prefill_tokens: int = 0          # prompt tokens actually prefilled
-    prefill_saved_tokens: int = 0    # prompt tokens skipped via prefix reuse
-    prefill_by_job: Dict[int, int] = field(default_factory=dict)
-
-    @property
-    def avg_jct(self) -> float:
-        """Mean job completion time in seconds (0.0 when empty)."""
-        return float(np.mean(self.jcts)) if self.jcts else 0.0
-
-    @property
-    def p95_jct(self) -> float:
-        """95th-percentile job completion time in seconds."""
-        return float(np.percentile(self.jcts, 95)) if self.jcts else 0.0
-
-    @property
-    def avg_overhead_ms(self) -> float:
-        """Mean scheduler invocation latency in milliseconds."""
-        return (
-            1e3 * float(np.mean(self.sched_overhead_s))
-            if self.sched_overhead_s
-            else 0.0
-        )
+# Backwards-compatible alias: the testbed's historical result type is
+# now the unified schema shared with the simulator.
+TestbedResult = RunMetrics
 
 
 class ServingCluster:
@@ -113,51 +57,52 @@ class ServingCluster:
         The LLM replica fleet; may mix capacities (heterogeneous KV
         budgets).  Replicas must share weights for migration to be
         lossless.
-    n_regular : int, optional
-        Regular executor slots (deadline-completed tasks).
-    token_scale : float, optional
-        Divide task token budgets by this so CPU runs finish quickly.
-    time_scale : float, optional
-        Compress arrival times and regular durations by this factor.
-    min_tokens : int, optional
-        Floor for a scaled LLM task's token budget.
-    migrate : bool, optional
-        Enable the live-migration rebalancer (paged replicas only).
-        Gates every rebalance pass — a supplied ``rebalancer`` is held
-        but never invoked while this is False.
+    config : ServeConfig, optional
+        Runtime configuration (executor slots, scaling factors, prompt
+        synthesis, migration).  Defaults to ``ServeConfig()``.  Note
+        the cluster consumes the *runtime* fields; fleet-shape fields
+        (``engine``/``replicas``/``kv_pages``…) describe the supplied
+        ``engines`` and are used by :func:`repro.serving.build_engines`.
     rebalancer : Rebalancer, optional
-        Custom policy instance; built with defaults when ``migrate``
-        is set and none is given.
-    shared_prompt_tokens : int, optional
-        When > 0, each LLM task's engine prompt is synthesized as an
-        application-wide shared system prefix of this many tokens
-        followed by a short stage/task-specific suffix — the compound-
-        app pattern that makes prefix caching pay.  0 (default) keeps
-        the historical 2-token prompts byte-for-byte.
+        Custom policy instance; built with defaults when
+        ``config.migrate`` is set and none is given.
+    **legacy
+        Deprecated pre-``ServeConfig`` kwargs (``n_regular``,
+        ``token_scale``, ``time_scale``, ``min_tokens``, ``migrate``,
+        ``shared_prompt_tokens``) — folded into ``config`` under a
+        :class:`DeprecationWarning` for one release.
     """
 
     def __init__(
         self,
         scheduler: Scheduler,
         engines: List[LLMEngine],
-        n_regular: int = 4,
-        token_scale: float = 8.0,
-        time_scale: float = 8.0,
-        min_tokens: int = 2,
-        migrate: bool = False,
+        config: Optional[ServeConfig] = None,
+        *,
         rebalancer: Optional[Rebalancer] = None,
-        shared_prompt_tokens: int = 0,
+        **legacy,
     ) -> None:
+        if legacy:
+            warnings.warn(
+                "passing ServingCluster options as keyword arguments is "
+                "deprecated; construct a repro.serving.ServeConfig instead "
+                f"(got: {sorted(legacy)})",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            config = ServeConfig.from_legacy_kwargs(config, **legacy)
+        config = config or ServeConfig()
+        self.config = config
         self.scheduler = scheduler
         self.engines = engines
-        self.n_regular = n_regular
-        self.token_scale = token_scale
-        self.time_scale = time_scale
-        self.min_tokens = min_tokens
-        self.migrate = migrate
+        self.n_regular = config.n_regular
+        self.token_scale = config.token_scale
+        self.time_scale = config.time_scale
+        self.min_tokens = config.min_tokens
+        self.migrate = config.migrate
         self.rebalancer = rebalancer
-        self.shared_prompt_tokens = int(shared_prompt_tokens)
-        if migrate and self.rebalancer is None:
+        self.shared_prompt_tokens = int(config.shared_prompt_tokens)
+        if self.migrate and self.rebalancer is None:
             self.rebalancer = Rebalancer(engines)
 
     def _prompt_for(self, task: Task, app_name: str) -> List[int]:
@@ -239,6 +184,12 @@ class ServingCluster:
                 jct = job.finish_time - job.arrival_time / self.time_scale
                 res.jcts.append(jct)
                 res.jct_by_job[job.job_id] = jct
+                if job.slo is not None:
+                    res.tier_by_job[job.job_id] = job.slo.tier
+                    res.deadline_by_job[job.job_id] = job.slo.deadline
+                    met = job.met_slo(self.time_scale)
+                    if met is not None:
+                        res.slo_met_by_job[job.job_id] = met
                 if job in active:
                     active.remove(job)
                 self.scheduler.observe_completion(job, now())
@@ -299,12 +250,22 @@ class ServingCluster:
                     )
                     finish_task(task)
 
+                # deadline-aware admission ordering: SLO jobs carry
+                # their scaled deadline as the request priority, so a
+                # paged engine drains its waiting queue EDF-first;
+                # SLO-less requests keep priority=inf (pure FIFO, the
+                # historical order, byte-for-byte)
+                slo = job_by_id[t.job_id].slo
                 req = Request(
                     rid=rid_counter[0],
                     prompt=prompt,
                     max_new_tokens=n_tok,
                     submitted_at=now(),
                     on_finish=_done,
+                    priority=(
+                        math.inf if slo is None
+                        else slo.deadline / self.time_scale
+                    ),
                 )
                 # can_admit() is a cheap pre-filter; a paged engine may
                 # still refuse a multi-page prompt, so fall through to
@@ -335,19 +296,15 @@ class ServingCluster:
             hit_tok = [
                 getattr(e, "prefix_cached_tokens", None) for e in self.engines
             ]
-            return ClusterView(
+            # assemble() owns the all-or-nothing gating (KV accounting /
+            # cache-affinity only when every replica reports it)
+            return ClusterView.assemble(
                 now=now(),
                 free_regular=sum(1 for s in reg_running if s is None),
                 llm_loads=[(e.batch_size, e.max_batch) for e in self.engines],
                 latency_profile=prof,
-                # KV accounting only when every replica reports it
-                llm_free_tokens=(
-                    free_tok if all(f is not None for f in free_tok) else None
-                ),
-                # cache-affinity signal only when every replica caches
-                llm_prefix_hit_tokens=(
-                    hit_tok if all(h is not None for h in hit_tok) else None
-                ),
+                llm_free_tokens=free_tok,
+                llm_prefix_hit_tokens=hit_tok,
             )
 
         # ------------------------- main loop -------------------------
@@ -393,4 +350,5 @@ class ServingCluster:
         res.prefill_saved_tokens = sum(
             getattr(e, "prefill_skipped_tokens", 0) for e in self.engines
         )
+        res.retractions = int(getattr(self.scheduler, "retractions", 0))
         return res

@@ -1,0 +1,210 @@
+"""Frozen serving configuration: one object instead of kwarg sprawl.
+
+Five PRs of feature growth left the serving stack's knobs scattered
+across ``ServingCluster.__init__``, ``repro.launch.serve``'s argparse
+surface, ``examples/serve_compound.py``, and the fig8 benchmark modes —
+each spelling the same options slightly differently.  ``ServeConfig``
+is the single, validated, hashable source of truth: engine selection,
+replica fleet shape, KV budgets, prefix caching, migration, workload
+scaling, seeds, and the SLO knobs introduced with deadline scheduling.
+
+``ServingCluster`` accepts either a ``ServeConfig`` or (for one
+release) the legacy kwargs, which are folded into a config under a
+``DeprecationWarning`` — see :func:`ServeConfig.from_legacy_kwargs`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import List, Optional, Tuple
+
+# (legacy ServingCluster kwarg → ServeConfig field) mapping used by the
+# deprecation shim; names happen to coincide today but are kept explicit
+# so a future rename does not silently break the shim.
+LEGACY_CLUSTER_KWARGS = {
+    "n_regular": "n_regular",
+    "token_scale": "token_scale",
+    "time_scale": "time_scale",
+    "min_tokens": "min_tokens",
+    "migrate": "migrate",
+    "shared_prompt_tokens": "shared_prompt_tokens",
+}
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    """Validated, immutable configuration for the serving testbed.
+
+    Attributes
+    ----------
+    engine : str
+        ``"slot"`` (dense per-slot KV) or ``"paged"`` (block-table
+        pool with capacity-based admission).
+    replicas : int
+        Number of LLM engine replicas (shared weights).
+    max_batch : int
+        Per-replica concurrent-request capacity.
+    max_len : int
+        Engine sequence capacity (prompt + decode) in tokens.
+    page_size : int
+        KV page size in tokens (paged engines only).
+    kv_pages : tuple of int, optional
+        Per-replica page-pool sizes (heterogeneous KV budgets);
+        ``None`` lets each engine size its own pool.
+    migrate : bool
+        Live-migrate decoding requests off KV-starved paged replicas.
+    prefix_cache : bool
+        Shared-prefix KV reuse via the radix index (paged only).
+    shared_prompt_tokens : int
+        Per-application shared system-prompt tokens synthesized into
+        every LLM task's prompt (0 keeps historical 2-token prompts).
+    n_regular : int
+        Regular executor slots.
+    token_scale : float
+        Divide task token budgets by this so smoke runs finish quickly.
+    time_scale : float
+        Compress arrival times and regular durations by this factor.
+    min_tokens : int
+        Floor for a scaled LLM task's token budget.
+    seed : int
+        Seed threaded to engines (sampling) and schedulers.
+    plan_ahead_s : float
+        SLO plan-ahead window W (workload seconds) for deadline-aware
+        schedulers; ignored by deadline-blind policies.
+    slo_tightness : float
+        Deadline-tightening factor for tiered workload generation
+        (1.0 = the generator's default slack).
+    """
+
+    engine: str = "slot"
+    replicas: int = 1
+    max_batch: int = 4
+    max_len: int = 96
+    page_size: int = 16
+    kv_pages: Optional[Tuple[int, ...]] = None
+    migrate: bool = False
+    prefix_cache: bool = False
+    shared_prompt_tokens: int = 0
+    n_regular: int = 4
+    token_scale: float = 8.0
+    time_scale: float = 8.0
+    min_tokens: int = 2
+    seed: int = 0
+    plan_ahead_s: float = 30.0
+    slo_tightness: float = 1.0
+
+    def __post_init__(self) -> None:
+        """Validate cross-field invariants at construction time."""
+        if self.engine not in ("slot", "paged"):
+            raise ValueError(f"engine must be 'slot' or 'paged', got {self.engine!r}")
+        if self.replicas < 1:
+            raise ValueError("replicas must be >= 1")
+        if self.kv_pages is not None:
+            object.__setattr__(self, "kv_pages", tuple(int(p) for p in self.kv_pages))
+            if len(self.kv_pages) != self.replicas:
+                raise ValueError(
+                    f"kv_pages needs {self.replicas} entries, got {len(self.kv_pages)}"
+                )
+        # synthesized prompt = shared prefix + 2 suffix tokens, and the
+        # engine needs at least one decode slot on top
+        if self.shared_prompt_tokens > self.max_len - 3:
+            raise ValueError(
+                f"shared_prompt_tokens {self.shared_prompt_tokens} too large: "
+                f"the synthesized prompt (+2 suffix tokens) must fit "
+                f"max_len {self.max_len}"
+            )
+
+    @classmethod
+    def from_legacy_kwargs(cls, base: Optional["ServeConfig"] = None, **kw) -> "ServeConfig":
+        """Fold legacy ``ServingCluster`` kwargs into a config.
+
+        Parameters
+        ----------
+        base : ServeConfig, optional
+            Starting config (defaults when ``None``).
+        **kw
+            Legacy kwarg names (see :data:`LEGACY_CLUSTER_KWARGS`).
+
+        Returns
+        -------
+        ServeConfig
+            ``base`` with the mapped fields overridden.
+
+        Raises
+        ------
+        TypeError
+            On a kwarg that was never a ``ServingCluster`` parameter.
+        """
+        cfg = base or cls()
+        updates = {}
+        for name, value in kw.items():
+            if name not in LEGACY_CLUSTER_KWARGS:
+                raise TypeError(f"unexpected keyword argument {name!r}")
+            updates[LEGACY_CLUSTER_KWARGS[name]] = value
+        return replace(cfg, **updates) if updates else cfg
+
+
+def build_engines(model_cfg, cfg: ServeConfig, params=None) -> List:
+    """Build the replica fleet described by ``cfg``.
+
+    Slot engines get per-replica seeds (``cfg.seed + i``); paged
+    engines share one set of weights (initialised from ``cfg.seed``
+    when ``params`` is not supplied), which is what makes live
+    migration lossless.
+
+    Parameters
+    ----------
+    model_cfg
+        Model configuration (e.g. from ``repro.configs``).
+    cfg : ServeConfig
+        Fleet shape and engine options.
+    params : optional
+        Pre-initialised model parameters shared by paged replicas.
+
+    Returns
+    -------
+    list
+        ``cfg.replicas`` engine instances.
+
+    Raises
+    ------
+    ValueError
+        When ``migrate``/``prefix_cache`` are requested for slot
+        engines (both need the paged KV pool).
+    """
+    if cfg.engine != "paged" and cfg.migrate:
+        raise ValueError("migrate=True requires engine='paged'")
+    if cfg.engine != "paged" and cfg.prefix_cache:
+        raise ValueError("prefix_cache=True requires engine='paged'")
+    if cfg.engine == "paged":
+        from .paged_engine import PagedLLMEngine
+
+        if params is None:
+            import jax
+
+            from ..models import init_params
+
+            params = init_params(model_cfg, jax.random.key(cfg.seed))[0]
+        return [
+            PagedLLMEngine(
+                model_cfg,
+                max_seqs=cfg.max_batch,
+                max_len=cfg.max_len,
+                page_size=cfg.page_size,
+                num_pages=cfg.kv_pages[i] if cfg.kv_pages else None,
+                params=params,
+                prefix_cache=cfg.prefix_cache,
+            )
+            for i in range(cfg.replicas)
+        ]
+    from .engine import LLMEngine
+
+    return [
+        LLMEngine(
+            model_cfg,
+            max_batch=cfg.max_batch,
+            max_len=cfg.max_len,
+            seed=cfg.seed + i,
+        )
+        for i in range(cfg.replicas)
+    ]

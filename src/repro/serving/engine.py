@@ -14,6 +14,7 @@ vLLM testbed does — just with a tiny model so it runs on CPU.
 
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -41,6 +42,10 @@ class Request:
     # prompt tokens actually run through prefill (cumulative across
     # recompute restarts; prefix-cache hits skip tokens and so reduce it)
     prefill_tokens: int = 0
+    # admission urgency: lower drains first from a paged engine's
+    # waiting queue (SLO jobs carry their scaled deadline — EDF);
+    # inf (default) keeps the historical FIFO order byte-for-byte
+    priority: float = math.inf
 
     def done(self) -> bool:
         return self.finished_at >= 0

@@ -41,6 +41,7 @@ a pooled page store + per-request block tables:
 
 from __future__ import annotations
 
+import math
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -650,11 +651,21 @@ class PagedLLMEngine(LatencyProfileMixin):
             token, or ``max_len``); their pages are already freed and
             ``on_finish`` callbacks already fired.
         """
+        # deadline-aware re-admission: drain the waiting queue lowest
+        # priority-value first; ``min`` breaks ties toward the queue
+        # head, so the all-priorities-inf case (no SLOs anywhere)
+        # degenerates to the historical FIFO ``popleft`` byte-for-byte.
+        # Head-of-line blocking on a failed place is intentional:
+        # admitting a lower-priority request past a stuck urgent one
+        # would hand it the very pages the urgent one needs.
         while self.waiting and self.free_rows:
-            req = self.waiting[0]
+            req = min(
+                self.waiting,
+                key=lambda r: getattr(r, "priority", math.inf),
+            )
             if not self._place(req):
                 break
-            self.waiting.popleft()
+            self.waiting.remove(req)
         if self.prefilling:
             self._run_prefill(self.prefill_chunk)
         if not self.active:

@@ -43,13 +43,14 @@ from __future__ import annotations
 import heapq
 import math
 import time as _time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.calibration import LatencyProfile, roofline_profile
 from ..core.dag import Job, Stage, Task, TaskState
+from ..core.metrics import RunMetrics
 from ..core.scheduler import ClusterView, Decision, Scheduler
 from .workloads import (
     TOKEN_LATENCY_B1,
@@ -75,30 +76,9 @@ class RunningLLMTask:
     executor: int
 
 
-@dataclass
-class SimResult:
-    jcts: List[float] = field(default_factory=list)
-    jct_by_job: Dict[int, float] = field(default_factory=dict)
-    sched_overhead_s: List[float] = field(default_factory=list)
-    makespan: float = 0.0
-    preemptions: int = 0
-    reissues: int = 0
-    migrations: int = 0  # cross-replica LLM-task moves (migrate=True)
-    prefill_tokens: float = 0.0        # modeled prompt tokens prefilled
-    prefill_saved_tokens: float = 0.0  # skipped via modeled prefix reuse
-    prefill_by_job: Dict[int, float] = field(default_factory=dict)
-
-    @property
-    def avg_jct(self) -> float:
-        return float(np.mean(self.jcts)) if self.jcts else 0.0
-
-    @property
-    def p95_jct(self) -> float:
-        return float(np.percentile(self.jcts, 95)) if self.jcts else 0.0
-
-    @property
-    def avg_overhead_ms(self) -> float:
-        return 1e3 * float(np.mean(self.sched_overhead_s)) if self.sched_overhead_s else 0.0
+# Backwards-compatible alias: the simulator's historical result type is
+# now the unified schema shared with the serving testbed.
+SimResult = RunMetrics
 
 
 class ClusterSim:
@@ -513,7 +493,7 @@ class ClusterSim:
                 res.migrations += 1
 
         def invoke_scheduler() -> None:
-            view = ClusterView(
+            view = ClusterView.assemble(
                 now=now,
                 free_regular=sum(1 for s in reg_running if s is None),
                 llm_loads=[
@@ -628,6 +608,7 @@ class ClusterSim:
             invoke_scheduler()
 
         res.makespan = now
+        res.retractions = int(getattr(self.scheduler, "retractions", 0))
         return res
 
     def _finish_task(
@@ -650,6 +631,12 @@ class ClusterSim:
             job.finish_time = now
             res.jcts.append(job.jct())
             res.jct_by_job[job.job_id] = job.jct()
+            if job.slo is not None:
+                res.tier_by_job[job.job_id] = job.slo.tier
+                res.deadline_by_job[job.job_id] = job.slo.deadline
+                met = job.met_slo()
+                if met is not None:
+                    res.slo_met_by_job[job.job_id] = met
             if job in active:
                 active.remove(job)
             self.scheduler.observe_completion(job, now)

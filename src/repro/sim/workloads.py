@@ -28,6 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.dag import (
+    SLO,
     ApplicationTemplate,
     Job,
     Stage,
@@ -577,6 +578,107 @@ def generate_workload(
         g = gens[str(rng.choice(names, p=p))]
         out.append(g.sample(rng, arrival_time=t))
     return out
+
+
+# ---------------------------------------------------------------------------
+# SLO-tiered workloads (deadline scheduling; ISSUE 6)
+# ---------------------------------------------------------------------------
+# Default tier mix: mostly latency-sensitive traffic with a batch tail,
+# mirroring production serving splits (SLO-aware LLM scheduling papers).
+SLO_TIER_PROBS: Dict[str, float] = {
+    "interactive": 0.4,
+    "batch": 0.4,
+    "best_effort": 0.2,
+}
+
+# Deadline = arrival + slack_factor × ground-truth duration / tightness.
+# Interactive jobs get the least headroom; best-effort deadlines are so
+# loose they only miss under heavy queueing.
+SLO_SLACK_FACTORS: Dict[str, float] = {
+    "interactive": 2.5,
+    "batch": 5.0,
+    "best_effort": 12.0,
+}
+
+
+def _ground_truth_duration(gj: GeneratedJob) -> float:
+    """Total batch-1 work of a generated job (serial execution bound).
+
+    Sums top-level stage durations only (dotted keys are dynamic-stage
+    inner durations already counted in the placeholder's total), giving
+    a deterministic per-job scale for deadline assignment.
+    """
+    return sum(v for k, v in gj.durations.items() if "." not in k)
+
+
+def assign_slos(
+    jobs: Sequence[GeneratedJob],
+    tier_probs: Optional[Dict[str, float]] = None,
+    slack_factors: Optional[Dict[str, float]] = None,
+    tightness: float = 1.0,
+    seed: int = 0,
+) -> List[GeneratedJob]:
+    """Attach an :class:`~repro.core.dag.SLO` to each generated job.
+
+    Tiers are drawn i.i.d. from ``tier_probs`` and deadlines are set to
+    ``arrival + slack_factor[tier] * work / tightness`` where ``work`` is
+    the job's ground-truth serial duration.  ``tightness`` > 1 shrinks
+    every deadline proportionally, which is the knob the monotonicity
+    property test sweeps.  Mutates ``jobs`` in place and returns them.
+
+    Parameters
+    ----------
+    jobs : sequence of GeneratedJob
+        Output of :func:`generate_workload` (or compatible).
+    tier_probs : dict, optional
+        ``tier → probability``; defaults to :data:`SLO_TIER_PROBS`.
+    slack_factors : dict, optional
+        ``tier → slack multiplier``; defaults to
+        :data:`SLO_SLACK_FACTORS`.
+    tightness : float
+        Global deadline-tightening factor (1.0 = defaults).
+    seed : int
+        RNG seed for the tier draw (independent of workload sampling).
+    """
+    probs = dict(SLO_TIER_PROBS if tier_probs is None else tier_probs)
+    slack = dict(SLO_SLACK_FACTORS if slack_factors is None else slack_factors)
+    rng = np.random.default_rng(seed)
+    names = list(probs)
+    p = np.array([probs[n] for n in names], dtype=float)
+    p /= p.sum()
+    for gj in jobs:
+        tier = str(rng.choice(names, p=p))
+        work = _ground_truth_duration(gj)
+        deadline = gj.job.arrival_time + slack[tier] * work / max(tightness, 1e-9)
+        gj.job.slo = SLO(tier=tier, deadline=deadline)
+    return list(jobs)
+
+
+def generate_tiered_workload(
+    mix: str,
+    n_jobs: int,
+    arrival_rate: float = 0.9,
+    seed: int = 0,
+    tier_probs: Optional[Dict[str, float]] = None,
+    slack_factors: Optional[Dict[str, float]] = None,
+    tightness: float = 1.0,
+) -> List[GeneratedJob]:
+    """Poisson-arrival workload where every job carries a tiered SLO.
+
+    Identical job stream to :func:`generate_workload` with the same
+    ``(mix, n_jobs, arrival_rate, seed)`` — SLOs are assigned by a
+    *separate* RNG stream (``seed + 1``) so adding deadlines never
+    perturbs job structure, which the golden-trajectory degeneracy test
+    relies on.
+    """
+    jobs = generate_workload(mix, n_jobs, arrival_rate=arrival_rate, seed=seed)
+    return assign_slos(
+        jobs,
+        tier_probs=tier_probs,
+        slack_factors=slack_factors,
+        tightness=tightness,
+        seed=seed + 1,
+    )
 
 
 def generate_traces(mix: str, n_jobs: int, seed: int = 1234) -> List[JobTrace]:

@@ -1,0 +1,429 @@
+"""SLO-tiered deadline scheduling: degeneracy, retraction, goodput.
+
+Covers the SLO tentpole end to end:
+
+- **golden-trajectory degeneracy**: the SLO-capable LLMSched on an
+  SLO-less workload reproduces the PR 5 decision stream byte-for-byte
+  (same hashes the prefix-cache suite pins), and loose-deadline tiered
+  workloads leave the stream unchanged too (deadline pressure perturbs
+  the JCT-optimal order only when a miss is actually projected);
+- **deadline-blind ablation**: ``slo_aware=False`` emits identical
+  decisions with and without SLOs on the jobs;
+- **retraction invariants**: plans are stable on static evidence
+  (repeat calls change nothing and retract nothing), an
+  ``evidence_version`` bump retracts exactly the bumped job's plan,
+  completed jobs drop their plan state, and decisions never contain
+  running tasks;
+- **ordering unit behaviour**: tier-ordered urgency boost, best-effort
+  never boosted, provably-infeasible demotion behind feasible work
+  (counted once per job), demoted jobs left unplaced;
+- **goodput property** (hypothesis): under any deadline-blind policy,
+  per-job attainment — and therefore goodput — is monotone in deadline
+  slack;
+- **API consolidation**: unified ``RunMetrics`` aliases, ``ServeConfig``
+  validation + the legacy-kwarg deprecation shim, and
+  ``ClusterView.assemble`` gating.
+"""
+
+import hashlib
+import warnings
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FCFS, LLMSched, ProfileStore, RunMetrics
+from repro.core.dag import SLO, SLO_TIERS, TaskState
+from repro.core.scheduler import ClusterView
+from repro.serving import ServeConfig
+from repro.serving import cluster as cluster_mod
+from repro.serving.cluster import ServingCluster
+from repro.serving.config import build_engines
+from repro.sim import generate_traces, generate_workload, get_generators
+from repro.sim.simulator import ClusterSim, SimResult
+from repro.sim.workloads import assign_slos, generate_tiered_workload
+
+# ---------------------------------------------------------------------------
+# shared fixtures
+# ---------------------------------------------------------------------------
+_STORE = None
+
+
+def _store():
+    global _STORE
+    if _STORE is None:
+        gens = get_generators()
+        apps = [g.template for g in gens.values()]
+        _STORE = ProfileStore().fit(apps, generate_traces("mixed", 120, seed=7))
+    return _STORE
+
+
+def _sched(**kw):
+    kw.setdefault("epsilon", 0.2)
+    kw.setdefault("seed", 0)
+    return LLMSched(_store(), **kw)
+
+
+# ---------------------------------------------------------------------------
+# golden-trajectory degeneracy vs PR 5
+# ---------------------------------------------------------------------------
+# Same capture the prefix-cache suite pins (tests/test_prefix_cache.py):
+# SHA-256 of the job-index-normalized LLMSched decision stream on the
+# seeded fig7-style trace, plus round count and avg JCT.  The SLO-capable
+# scheduler must reproduce these exactly when no job carries an SLO.
+_GOLD = {
+    "no_kv": ("f0a1535da4df96f382ac82bd79543816d4647d2041c61866eec03a6ea89c2ee2",
+              185, 34.531148),
+    "kv": ("76ff31e613e53efc6b261452a5a0936094c42b7280ea999d343e3a670e88322a",
+           196, 39.830019),
+}
+
+
+def _trajectory(kv, wl, sched):
+    """Run the seeded fig7-style sim, hashing the decision stream."""
+    jid = {gj.job.job_id: i for i, gj in enumerate(wl)}
+    log = []
+    orig = sched.schedule
+
+    def rec(jobs, view):
+        dec = orig(jobs, view)
+        log.append((
+            tuple((jid[t.job_id], t.stage_name, t.index) for t in dec.regular),
+            tuple((jid[t.job_id], t.stage_name, t.index) for t in dec.llm),
+            tuple(sorted(
+                (jid[j], s, i, e) for (j, s, i), e in dec.placement.items()
+            )),
+        ))
+        return dec
+
+    sched.schedule = rec
+    sim = ClusterSim(sched, n_regular=4, n_llm=2, max_batch=8,
+                     kv_budget_tokens=kv, seed=0)
+    res = sim.run(wl)
+    return (hashlib.sha256(repr(log).encode()).hexdigest(), len(log),
+            round(res.avg_jct, 6)), res
+
+
+@pytest.mark.parametrize("tag,kv", [("no_kv", None), ("kv", [3000, 8000])])
+def test_sloless_workload_degenerates_to_pr5_golden_trajectory(tag, kv):
+    """With no SLO anywhere, the deadline machinery must be inert:
+    decisions byte-identical to the PR 5 golden capture."""
+    wl = generate_workload("mixed", 20, arrival_rate=1.2, seed=11)
+    sig, res = _trajectory(kv, wl, _sched(plan_ahead_s=30.0, slo_aware=True))
+    assert sig == _GOLD[tag], (
+        f"SLO-capable LLMSched drifted from the PR 5 capture on an "
+        f"SLO-less workload ({tag}): {sig} != {_GOLD[tag]}"
+    )
+    assert res.goodput() is None          # no SLOs -> no goodput
+    assert res.retractions == 0
+
+
+def test_loose_deadlines_preserve_sloless_trajectory():
+    """Comfortable slack must not perturb the SRTF/uncertainty order:
+    a tiered workload whose deadlines are never at risk produces the
+    same decision stream as the SLO-less run."""
+    wl = generate_tiered_workload("mixed", 20, arrival_rate=1.2, seed=11,
+                                  tightness=0.01)
+    assert all(gj.job.slo is not None for gj in wl)
+    sig, res = _trajectory(None, wl, _sched(plan_ahead_s=30.0))
+    assert sig == _GOLD["no_kv"]
+    assert res.goodput() is not None      # SLOs present -> goodput reported
+
+
+def test_blind_scheduler_ignores_deadlines():
+    """``slo_aware=False`` is the deadline-blind ablation: identical
+    decisions whether or not jobs carry (tight) SLOs."""
+    base = generate_workload("mixed", 20, arrival_rate=1.2, seed=11)
+    tiered = generate_tiered_workload("mixed", 20, arrival_rate=1.2,
+                                      seed=11, tightness=3.0)
+    sig_base, _ = _trajectory(None, base, _sched(slo_aware=False))
+    sig_tiered, res = _trajectory(None, tiered, _sched(slo_aware=False))
+    assert sig_base == sig_tiered == _GOLD["no_kv"]
+    assert res.retractions == 0           # blind mode builds no plans
+
+
+def test_tiered_generation_does_not_perturb_job_structure():
+    """SLO assignment draws from a separate RNG stream: the underlying
+    jobs (ids, apps, arrivals, durations) are byte-identical to the
+    plain generator's output at the same seed."""
+    base = generate_workload("mixed", 15, arrival_rate=1.2, seed=4)
+    tiered = generate_tiered_workload("mixed", 15, arrival_rate=1.2, seed=4)
+    assert len(base) == len(tiered)
+    for b, t in zip(base, tiered):
+        # job_id is a process-global counter, so compare structure
+        assert b.job.app.name == t.job.app.name
+        assert b.job.arrival_time == t.job.arrival_time
+        assert b.durations == t.durations
+        assert b.job.slo is None and t.job.slo is not None
+        assert t.job.slo.tier in SLO_TIERS
+        assert t.job.slo.deadline > t.job.arrival_time
+
+
+# ---------------------------------------------------------------------------
+# ordering unit behaviour (_slo_order with crafted bounds)
+# ---------------------------------------------------------------------------
+def _four_jobs():
+    wl = generate_workload("mixed", 4, arrival_rate=0.9, seed=5)
+    return [gj.job for gj in wl]
+
+
+def test_slo_order_boost_demote_and_tier_precedence():
+    jobs = _four_jobs()
+    a, b, c, d = jobs
+    now, view = 0.0, ClusterView(now=0.0, free_regular=4, llm_loads=[(0, 8)])
+    # a: interactive, at risk inside the window        -> boosted first
+    # b: batch, at risk inside the window              -> boosted after a
+    # c: best_effort, at risk inside the window        -> never boosted
+    # d: interactive, provably infeasible (lo > slack) -> demoted last
+    a.slo = SLO("interactive", deadline=now + 10.0)
+    b.slo = SLO("batch", deadline=now + 10.0)
+    c.slo = SLO("best_effort", deadline=now + 10.0)
+    d.slo = SLO("interactive", deadline=now + 10.0)
+    bounds = {
+        a.job_id: (1.0, 100.0),
+        b.job_id: (1.0, 100.0),
+        c.job_id: (1.0, 100.0),
+        d.job_id: (50.0, 100.0),   # optimistic bound already misses
+    }
+    sched = _sched(epsilon=0.0)
+    # feed in an arbitrary (SRTF-stand-in) order with d first
+    ordered = sched._slo_order([d, c, b, a], view, bounds)
+    assert ordered == [a, b, c, d]
+    assert sched.demotions == 1 and d.job_id in sched._demoted
+    # repeat on static state: same order, demotion counted once
+    assert sched._slo_order([d, c, b, a], view, bounds) == [a, b, c, d]
+    assert sched.demotions == 1
+
+
+def test_slo_order_comfortable_slack_keeps_srtf_position():
+    jobs = _four_jobs()
+    a, b, c, d = jobs
+    view = ClusterView(now=0.0, free_regular=4, llm_loads=[(0, 8)])
+    # deadlines far beyond the plan-ahead window and bounds comfortably
+    # inside the slack: nobody is boosted or demoted
+    for j in jobs:
+        j.slo = SLO("interactive", deadline=1e6)
+    bounds = {j.job_id: (1.0, 5.0) for j in jobs}
+    sched = _sched(epsilon=0.0, plan_ahead_s=30.0)
+    assert sched._slo_order([c, a, d, b], view, bounds) == [c, a, d, b]
+    assert sched.demotions == 0
+
+
+def test_demoted_jobs_are_not_placed():
+    """Provably-infeasible jobs reserve no KV: their LLM tasks carry no
+    placement hint while feasible jobs' tasks do."""
+    wl = generate_tiered_workload("mixed", 8, arrival_rate=1.2, seed=3,
+                                  tightness=1e9)   # every deadline hopeless
+    jobs = [gj.job for gj in wl]
+    sched = _sched(epsilon=0.0)
+    view = ClusterView(now=max(j.arrival_time for j in jobs) + 1.0,
+                       free_regular=4, llm_loads=[(0, 8), (0, 8)],
+                       llm_free_tokens=[4096, 4096])
+    dec = sched.schedule(jobs, view)
+    assert sched.demotions == len(jobs)
+    assert dec.llm                         # still schedulable (no starvation)
+    assert all(t.job_id in sched._demoted for t in dec.llm)
+    assert dec.placement == {}
+
+
+# ---------------------------------------------------------------------------
+# retraction invariants
+# ---------------------------------------------------------------------------
+def _static_setup():
+    wl = generate_tiered_workload("mixed", 6, arrival_rate=0.9, seed=8,
+                                  tightness=1.0)
+    jobs = [gj.job for gj in wl]
+    sched = _sched(epsilon=0.0)            # no RNG draws between calls
+    view = ClusterView(now=0.0, free_regular=4, llm_loads=[(0, 8)])
+    return jobs, sched, view
+
+
+def _dec_sig(dec):
+    return (
+        tuple((t.job_id, t.stage_name, t.index) for t in dec.regular),
+        tuple((t.job_id, t.stage_name, t.index) for t in dec.llm),
+        tuple(sorted(dec.placement.items())),
+    )
+
+
+def test_static_evidence_is_stable_and_retracts_nothing():
+    jobs, sched, view = _static_setup()
+    first = _dec_sig(sched.schedule(jobs, view))
+    assert sched.retractions == 0          # first plans are builds, not retractions
+    for _ in range(3):
+        assert _dec_sig(sched.schedule(jobs, view)) == first
+    assert sched.retractions == 0
+
+
+def test_evidence_bump_retracts_exactly_that_plan():
+    jobs, sched, view = _static_setup()
+    sched.schedule(jobs, view)
+    target = next(j for j in jobs if j.slo is not None)
+    old_plan = sched._slo_plans[target.job_id]
+    target.bump_evidence()
+    sched.schedule(jobs, view)
+    assert sched.retractions == 1
+    assert sched._slo_plans[target.job_id] is not old_plan
+    assert sched._slo_plans[target.job_id].version == target.evidence_version
+
+
+def test_completion_drops_plan_state():
+    jobs, sched, view = _static_setup()
+    sched.schedule(jobs, view)
+    target = jobs[0]
+    assert target.job_id in sched._slo_plans
+    sched.observe_completion(target, now=1.0)
+    assert target.job_id not in sched._slo_plans
+    assert target.job_id not in sched._demoted
+
+
+def test_running_tasks_are_never_retracted():
+    """Decisions only ever contain pending tasks — a dispatched (running)
+    task cannot reappear, so retraction can never touch running work."""
+    jobs, sched, view = _static_setup()
+    dec = sched.schedule(jobs, view)
+    victims = (dec.llm or dec.regular)[:1]
+    assert victims
+    for t in victims:
+        t.state = TaskState.RUNNING
+        job = next(j for j in jobs if j.job_id == t.job_id)
+        job.bump_evidence()                # runtime bumps on dispatch
+    dec2 = sched.schedule(jobs, view)
+    running = {(t.job_id, t.stage_name, t.index) for t in victims}
+    listed = {
+        (t.job_id, t.stage_name, t.index) for t in dec2.regular + dec2.llm
+    }
+    assert not (running & listed)
+
+
+# ---------------------------------------------------------------------------
+# goodput monotonicity (deadline-blind => monotone in slack)
+# ---------------------------------------------------------------------------
+_FCFS_RUN = None
+
+
+def _fcfs_run():
+    """One seeded FCFS sim; FCFS never reads deadlines, so its finish
+    times are a fixed function of the workload."""
+    global _FCFS_RUN
+    if _FCFS_RUN is None:
+        wl = generate_tiered_workload("mixed", 15, arrival_rate=1.2, seed=13,
+                                      tightness=1.0)
+        sim = ClusterSim(FCFS(), n_regular=4, n_llm=2, max_batch=8, seed=13)
+        sim.run(wl)
+        _FCFS_RUN = wl
+    return _FCFS_RUN
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lo=st.floats(min_value=0.25, max_value=4.0),
+    hi=st.floats(min_value=0.25, max_value=4.0),
+)
+def test_goodput_monotone_in_slack_for_deadline_blind_policy(lo, hi):
+    """Loosening every deadline can only help: for tightness lo <= hi,
+    per-job attainment under hi implies attainment under lo, hence
+    goodput(lo) >= goodput(hi)."""
+    lo, hi = min(lo, hi), max(lo, hi)
+    wl = _fcfs_run()
+
+    def attainment(tightness):
+        assign_slos(wl, tightness=tightness, seed=13 + 1)
+        return {gj.job.job_id: gj.job.met_slo() for gj in wl}
+
+    met_hi, met_lo = attainment(hi), attainment(lo)
+    for jid, ok in met_hi.items():
+        if ok:
+            assert met_lo[jid], (
+                f"job {jid} met its deadline at tightness {hi} but not at "
+                f"looser tightness {lo}"
+            )
+    g = [sum(m.values()) / len(m) for m in (met_lo, met_hi)]
+    assert g[0] >= g[1]
+
+
+# ---------------------------------------------------------------------------
+# unified RunMetrics
+# ---------------------------------------------------------------------------
+def test_result_aliases_are_the_unified_schema():
+    assert SimResult is RunMetrics
+    assert cluster_mod.TestbedResult is RunMetrics
+
+
+def test_goodput_accounting():
+    r = RunMetrics()
+    assert r.goodput() is None             # no SLO jobs at all
+    r.tier_by_job = {1: "interactive", 2: "interactive", 3: "batch"}
+    r.slo_met_by_job = {1: True, 2: False, 3: True}
+    assert r.goodput() == pytest.approx(2 / 3)
+    assert r.goodput("interactive") == pytest.approx(0.5)
+    assert r.goodput("batch") == 1.0
+    assert r.goodput("best_effort") is None
+    assert r.goodput_by_tier() == {
+        "interactive": pytest.approx(0.5), "batch": 1.0
+    }
+
+
+def test_slo_validation_and_attainment():
+    with pytest.raises(ValueError):
+        SLO("platinum", deadline=1.0)
+    wl = generate_workload("mixed", 1, seed=0)
+    job = wl[0].job
+    assert job.met_slo() is None           # SLO-less
+    job.slo = SLO("interactive", deadline=50.0)
+    job.finish_time = 40.0
+    assert job.met_slo() is True
+    assert job.met_slo(time_scale=2.0) is False   # 40 > 50/2
+
+
+# ---------------------------------------------------------------------------
+# ServeConfig + deprecation shim + view assembly
+# ---------------------------------------------------------------------------
+def test_serve_config_validation():
+    with pytest.raises(ValueError):
+        ServeConfig(engine="dense")
+    with pytest.raises(ValueError):
+        ServeConfig(replicas=0)
+    with pytest.raises(ValueError):
+        ServeConfig(engine="paged", replicas=2, kv_pages=(13,))
+    with pytest.raises(ValueError):
+        ServeConfig(shared_prompt_tokens=96, max_len=96)
+    cfg = ServeConfig(engine="paged", replicas=2, kv_pages=[13.0, 49])
+    assert cfg.kv_pages == (13, 49)        # coerced + frozen
+
+
+def test_build_engines_rejects_slot_migration_and_prefix_cache():
+    with pytest.raises(ValueError):
+        build_engines(None, ServeConfig(engine="slot", migrate=True))
+    with pytest.raises(ValueError):
+        build_engines(None, ServeConfig(engine="slot", prefix_cache=True))
+
+
+def test_legacy_kwargs_shim_maps_and_warns():
+    with pytest.warns(DeprecationWarning):
+        cluster = ServingCluster(FCFS(), engines=[], n_regular=2,
+                                 token_scale=16.0, time_scale=5.0,
+                                 shared_prompt_tokens=8)
+    assert cluster.config.n_regular == 2 and cluster.n_regular == 2
+    assert cluster.config.token_scale == 16.0
+    assert cluster.time_scale == 5.0
+    assert cluster.shared_prompt_tokens == 8
+    with pytest.raises(TypeError):
+        ServeConfig.from_legacy_kwargs(engines=3)   # never a cluster kwarg
+    # explicit config passes through untouched, no warning
+    cfg = ServeConfig(n_regular=7)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cluster = ServingCluster(FCFS(), engines=[], config=cfg)
+    assert cluster.config is cfg
+
+
+def test_cluster_view_assemble_gates_partial_signals():
+    v = ClusterView.assemble(
+        now=1.0, free_regular=2, llm_loads=[(0, 4), (1, 4)],
+        llm_free_tokens=[128, None],           # one replica can't report
+        llm_prefix_hit_tokens=[16, 32],
+    )
+    assert v.llm_free_tokens is None           # collapses fleet-wide
+    assert v.llm_prefix_hit_tokens == [16, 32]
+    v2 = ClusterView.assemble(now=0.0, free_regular=0, llm_loads=[])
+    assert v2.llm_free_tokens is None and v2.llm_prefix_hit_tokens is None

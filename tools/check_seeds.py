@@ -7,8 +7,9 @@ modes of one comparison (cache off/on, migration off/on) see the same
 trace.  This audit parses the given files (default: ``benchmarks/*.py``)
 and fails when:
 
-- ``generate_workload`` / ``generate_traces`` / ``simulate`` is called
-  without a ``seed=`` keyword (or a 4th positional for the generators);
+- ``generate_workload`` / ``generate_tiered_workload`` / ``assign_slos``
+  / ``generate_traces`` / ``simulate`` is called without a ``seed=``
+  keyword (or the corresponding positional for the generators);
 - ``numpy.random.default_rng`` is called with no argument (an OS-seeded
   RNG makes the run unreproducible);
 - ``jax.random.key`` / ``jax.random.PRNGKey`` is called with no
@@ -27,9 +28,17 @@ import sys
 from pathlib import Path
 
 # calls that must carry an explicit seed argument
-SEED_KW_FUNCS = {"generate_workload", "generate_traces", "simulate"}
+SEED_KW_FUNCS = {
+    "generate_workload", "generate_traces", "simulate",
+    "generate_tiered_workload", "assign_slos",
+}
 # positional index at which the generators accept seed
-SEED_POS = {"generate_workload": 3, "generate_traces": 2}
+SEED_POS = {
+    "generate_workload": 3,
+    "generate_traces": 2,
+    "generate_tiered_workload": 3,
+    "assign_slos": 4,
+}
 # calls that must receive at least one (seed) argument
 NONEMPTY_FUNCS = {"default_rng", "key", "PRNGKey"}
 # module-level global-RNG attributes that are banned outright

@@ -1,0 +1,67 @@
+"""Static analysis + runtime sanitizers for the reproduction.
+
+Three layers, one package:
+
+- **determinism lint** (:mod:`.framework`, :mod:`.determinism`,
+  :mod:`.seeds`) — stdlib-only AST passes run by
+  ``tools/run_analysis.py`` and the CI ``analysis`` job;
+- **kvsan** (:mod:`.kvsan`) — the KV-page shadow-state sanitizer behind
+  ``PageAllocator(sanitize=True)`` / ``REPRO_SANITIZE=1``;
+- **scheduler invariants** (:mod:`.invariants`) — Decision-level checks
+  behind ``LLMSched(check_invariants=True)``.
+
+The lint layer imports eagerly (it must work without numpy/jax, e.g. in
+the dependency-free CI analysis job).  The runtime layers are exposed
+lazily so ``import repro.analysis`` never drags in the serving or
+scheduler stacks.
+"""
+
+from .framework import (  # noqa: F401
+    Checker,
+    Finding,
+    Source,
+    all_checkers,
+    check_source,
+    iter_py_files,
+    register,
+    rule_catalog,
+    run_paths,
+)
+from . import determinism as _determinism  # noqa: F401  (registers checkers)
+from . import seeds as _seeds  # noqa: F401  (registers checkers)
+
+_LAZY = {
+    "KVSanError": "kvsan",
+    "KVSanitizer": "kvsan",
+    "InvariantViolation": "invariants",
+    "check_decision": "invariants",
+    "INVARIANTS": "invariants",
+}
+
+
+def __getattr__(name):
+    """Resolve runtime-layer symbols on first access (PEP 562)."""
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(f".{mod}", __name__), name)
+
+
+__all__ = [
+    "Checker",
+    "Finding",
+    "Source",
+    "all_checkers",
+    "check_source",
+    "iter_py_files",
+    "register",
+    "rule_catalog",
+    "run_paths",
+    "KVSanError",
+    "KVSanitizer",
+    "InvariantViolation",
+    "check_decision",
+    "INVARIANTS",
+]

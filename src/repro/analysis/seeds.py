@@ -1,0 +1,134 @@
+"""Seed-discipline checker (absorbs the old ``tools/check_seeds.py``).
+
+Every benchmark, test, and example must thread an **explicit seed** into
+each randomness source it touches, so artifacts are reproducible and two
+modes of one comparison (cache off/on, migration off/on) see the same
+trace.  Three rules:
+
+- ``seed-missing`` — a workload/trace generator or ``simulate`` call
+  without a ``seed=`` keyword (or the corresponding positional);
+- ``unseeded-rng`` — ``numpy.random.default_rng()`` /
+  ``jax.random.key()`` / ``PRNGKey()`` called with no argument (an
+  OS-seeded RNG makes the run unreproducible);
+- ``global-rng`` — module-level global-RNG use (``np.random.<dist>()``
+  or stdlib ``random.<dist>()``): the global RNG's state is shared and
+  unseedable per call site — use ``default_rng(seed)``.
+
+This is the same rule set the standalone script enforced, now emitted
+through :mod:`repro.analysis.framework` so findings share the
+suppression syntax and the single CI driver.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .determinism import _attr_chain
+from .framework import Checker, Finding, Source, register
+
+
+@register
+class SeedDisciplineChecker(Checker):
+    """Flag randomness sources that do not carry an explicit seed."""
+
+    rules = {
+        "seed-missing": (
+            "workload/trace generator called without an explicit seed"
+        ),
+        "unseeded-rng": (
+            "RNG constructor called without a seed argument"
+        ),
+        "global-rng": (
+            "module-level global RNG use; construct default_rng(seed)"
+        ),
+    }
+
+    #: calls that must carry an explicit seed argument
+    SEED_KW_FUNCS = {
+        "generate_workload", "generate_traces", "simulate",
+        "generate_tiered_workload", "assign_slos",
+    }
+    #: positional index at which the generators accept seed
+    SEED_POS = {
+        "generate_workload": 3,
+        "generate_traces": 2,
+        "generate_tiered_workload": 3,
+        "assign_slos": 4,
+    }
+    #: calls that must receive at least one (seed) argument
+    NONEMPTY_FUNCS = {"default_rng", "key", "PRNGKey"}
+    #: module-level global-RNG attributes banned outright
+    BANNED_NP_RANDOM = {
+        "rand", "randn", "randint", "random", "choice", "shuffle",
+        "permutation", "uniform", "normal", "exponential", "poisson",
+    }
+    #: stdlib ``random.<attr>()`` module-level calls banned outright
+    BANNED_STD_RANDOM = {
+        "random", "randint", "randrange", "choice", "choices", "shuffle",
+        "sample", "uniform", "normalvariate", "gauss", "expovariate",
+    }
+
+    @staticmethod
+    def _call_name(node: ast.Call) -> str:
+        fn = node.func
+        if isinstance(fn, ast.Name):
+            return fn.id
+        if isinstance(fn, ast.Attribute):
+            return fn.attr
+        return ""
+
+    def check(self, src: Source) -> List[Finding]:
+        """Return every seed-discipline violation in ``src``."""
+        out: List[Finding] = []
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = self._call_name(node)
+            kwargs = {kw.arg for kw in node.keywords}
+            if name in self.SEED_KW_FUNCS:
+                has_kw = "seed" in kwargs or None in kwargs  # None: **kw splat
+                has_pos = len(node.args) > self.SEED_POS.get(name, 99)
+                if not (has_kw or has_pos):
+                    out.append(self.finding(
+                        src, node, "seed-missing",
+                        f"{name}(...) without an explicit seed",
+                    ))
+            elif name in self.NONEMPTY_FUNCS:
+                chain = _attr_chain(node.func)
+                # attribute calls must come off a `random` module; bare
+                # names (``from numpy.random import default_rng``) count
+                # too when the name is unambiguous (`key` alone is not)
+                if isinstance(node.func, ast.Attribute):
+                    relevant = "random" in chain
+                else:
+                    relevant = name in ("default_rng", "PRNGKey")
+                if relevant and not node.args and not node.keywords:
+                    out.append(self.finding(
+                        src, node, "unseeded-rng",
+                        f"{'.'.join(chain) or name}() without a seed",
+                    ))
+            elif isinstance(node.func, ast.Attribute):
+                chain = _attr_chain(node.func)
+                if (
+                    len(chain) >= 3
+                    and chain[0] in ("np", "numpy")
+                    and chain[1] == "random"
+                    and chain[2] in self.BANNED_NP_RANDOM
+                ):
+                    out.append(self.finding(
+                        src, node, "global-rng",
+                        f"global RNG {'.'.join(chain)}() — use "
+                        "default_rng(seed) instead",
+                    ))
+                elif (
+                    len(chain) == 2
+                    and chain[0] == "random"
+                    and chain[1] in self.BANNED_STD_RANDOM
+                ):
+                    out.append(self.finding(
+                        src, node, "global-rng",
+                        f"global RNG random.{chain[1]}() — use "
+                        "random.Random(seed) instead",
+                    ))
+        return out

@@ -386,6 +386,15 @@ class LLMSched(Scheduler):
         deadline-blind even on SLO-carrying workloads (identical
         decisions to an SLO-less run) — the ablation baseline the
         goodput benchmark compares against.
+    check_invariants : bool, optional
+        Validate every decision against the declarative invariant
+        catalog in :mod:`repro.analysis.invariants` (no running-task
+        retraction, demoted jobs unplaced, placement bounds, plan
+        snapshots pinned to current evidence/calibration, EDF order of
+        the urgent bucket), raising
+        :class:`~repro.analysis.invariants.InvariantViolation` on the
+        first bad round.  Observation-only: the decision stream is
+        identical with checking on or off.
     """
 
     name = "llmsched"
@@ -411,6 +420,7 @@ class LLMSched(Scheduler):
         incremental: bool = True,
         plan_ahead_s: float = 30.0,
         slo_aware: bool = True,
+        check_invariants: bool = False,
     ) -> None:
         self.profiles = profiles
         self.epsilon = float(epsilon)
@@ -419,6 +429,10 @@ class LLMSched(Scheduler):
         self.incremental = bool(incremental)
         self.plan_ahead_s = float(plan_ahead_s)
         self.slo_aware = bool(slo_aware)
+        self.check_invariants = bool(check_invariants)
+        # urgent-bucket sort keys of the latest round, recorded for the
+        # EDF invariant (None until _slo_order runs with checking on)
+        self._last_urgent_keys: Optional[List[Tuple]] = None
         self.rng = np.random.default_rng(seed)
         # SLO plan-ahead state: per-job plan snapshots pinned to the
         # job's evidence version (see _SloPlan), plus public counters.
@@ -594,6 +608,8 @@ class LLMSched(Scheduler):
             docstring for the placement score).
         """
         self._ur_cache.clear()
+        if self.check_invariants:
+            self._last_urgent_keys = None
         jobs = [j for j in jobs if not j.done()]
         if not jobs:
             return Decision()
@@ -654,6 +670,13 @@ class LLMSched(Scheduler):
         # multi-replica placement: duration-bound width as the entropy
         # proxy (same arrays that drove the grouping above)
         self._place_llm(dec, view, self._job_uncertainty(jobs, los, his))
+
+        if self.check_invariants:
+            # imported lazily: the analysis package must stay optional
+            # on the scheduling hot path
+            from ..analysis.invariants import check_decision
+
+            check_decision(self, jobs, view, dec)
         return dec
 
     # -- SLO plan-ahead / retraction ----------------------------------------
@@ -785,6 +808,8 @@ class LLMSched(Scheduler):
                 normal.append(job)
         urgent.sort(key=lambda t: t[:4])
         self._demoted = demoted_now
+        if self.check_invariants:
+            self._last_urgent_keys = [t[:4] for t in urgent]
         return [t[4] for t in urgent] + normal + infeasible
 
     @staticmethod

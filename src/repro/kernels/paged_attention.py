@@ -158,3 +158,77 @@ def paged_decode_attention(
         interpret=interpret,
     )(block_tables.astype(jnp.int32), lengths.astype(jnp.int32), qr, kr, vr)
     return out.reshape(B, K, g, hd_v).reshape(B, H, hd_v)
+
+
+def check_block_table_bounds(
+    block_tables,
+    lengths,
+    num_pages: int,
+    page_size: int,
+    trash_page: int = 0,
+) -> None:
+    """Host-side static bounds check of a decode call's block tables.
+
+    The Pallas kernel's index maps are *unconditional*: every
+    ``bt[b, j]`` entry is used as a DMA source page, valid or not.
+    Out-of-range indices would read (and the engine's scatter-write
+    would write) outside the pool, and a trash entry inside a row's
+    covered range means a live token's KV was never given a real page.
+    This check runs on the host arrays immediately before the kernel
+    (under ``REPRO_SANITIZE``/``sanitize=True``) and in unit tests with
+    adversarial tables.
+
+    Parameters
+    ----------
+    block_tables : array_like, shape (B, pages_per_seq)
+        Physical page ids per row (``trash_page`` marks padding).
+    lengths : array_like, shape (B,)
+        Valid tokens per row *excluding* the token being decoded (the
+        engine's convention: the incoming token writes at position
+        ``lengths[b]``); 0 marks a padding row.
+    num_pages : int
+        The allocator's pool size.
+    page_size : int
+        Tokens per page.
+    trash_page : int, optional
+        The reserved padding page id.
+
+    Raises
+    ------
+    ValueError
+        Naming the offending row/entry on any out-of-range index or
+        any trash entry within a live row's covered page range.
+    """
+    import numpy as np
+
+    bt = np.asarray(block_tables)
+    lens = np.asarray(lengths)
+    if bt.ndim != 2 or lens.shape != (bt.shape[0],):
+        raise ValueError(
+            f"shape mismatch: block_tables {bt.shape} vs lengths {lens.shape}"
+        )
+    bad = (bt < 0) | (bt >= num_pages)
+    if bad.any():
+        b, j = map(int, np.argwhere(bad)[0])
+        raise ValueError(
+            f"block-table entry out of pool bounds: bt[{b}, {j}] = "
+            f"{int(bt[b, j])} not in [0, {num_pages})"
+        )
+    # a live row writes at position lengths[b]: pages 0..lengths[b]//ps
+    # inclusive must be real pages
+    cov = np.where(lens > 0, lens // page_size + 1, 0)
+    if (cov > bt.shape[1]).any():
+        b = int(np.argmax(cov > bt.shape[1]))
+        raise ValueError(
+            f"row {b} needs {int(cov[b])} pages for length {int(lens[b])} "
+            f"but the block table holds only {bt.shape[1]}"
+        )
+    pos = np.arange(bt.shape[1])[None, :]
+    covered_trash = (pos < cov[:, None]) & (bt == trash_page)
+    if covered_trash.any():
+        b, j = map(int, np.argwhere(covered_trash)[0])
+        raise ValueError(
+            f"trash page inside covered range: bt[{b}, {j}] is the trash "
+            f"page but row {b} has length {int(lens[b])} "
+            f"(covers {int(cov[b])} pages)"
+        )

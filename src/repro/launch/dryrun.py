@@ -432,12 +432,12 @@ def run_cell(
 
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_chips = mesh.devices.size
-    t0 = time.time()
+    t0 = time.perf_counter()
     lowered, aux = lower_cell(cfg, shape, mesh, opt_state_dtype=opt_state_dtype, rules=rule_override)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     try:
         mem = compiled.memory_analysis()

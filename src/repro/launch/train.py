@@ -82,7 +82,7 @@ def main(argv=None) -> int:
 
     rng = np.random.default_rng(args.seed)
     losses = []
-    t0 = time.time()
+    t0 = time.perf_counter()
     for s in range(start, args.steps):
         batch = synthetic_batch(rng, cfg, args.batch, args.seq)
         params, opt_state, metrics = step_fn(params, opt_state, batch)
@@ -93,7 +93,7 @@ def main(argv=None) -> int:
         if args.ckpt_dir and (s + 1) % args.ckpt_every == 0:
             p = save_checkpoint(args.ckpt_dir, s + 1, (params, opt_state))
             print(f"[train] checkpointed -> {p}")
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"[train] {args.steps - start} steps in {dt:.1f}s; "
           f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
     return 0 if losses[-1] < losses[0] else 1

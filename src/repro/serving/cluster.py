@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import math
 import time
-import warnings
 import zlib
 from typing import List, Optional, Sequence, Tuple
 
@@ -66,11 +65,6 @@ class ServingCluster:
     rebalancer : Rebalancer, optional
         Custom policy instance; built with defaults when
         ``config.migrate`` is set and none is given.
-    **legacy
-        Deprecated pre-``ServeConfig`` kwargs (``n_regular``,
-        ``token_scale``, ``time_scale``, ``min_tokens``, ``migrate``,
-        ``shared_prompt_tokens``) — folded into ``config`` under a
-        :class:`DeprecationWarning` for one release.
     """
 
     def __init__(
@@ -80,17 +74,7 @@ class ServingCluster:
         config: Optional[ServeConfig] = None,
         *,
         rebalancer: Optional[Rebalancer] = None,
-        **legacy,
     ) -> None:
-        if legacy:
-            warnings.warn(
-                "passing ServingCluster options as keyword arguments is "
-                "deprecated; construct a repro.serving.ServeConfig instead "
-                f"(got: {sorted(legacy)})",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-            config = ServeConfig.from_legacy_kwargs(config, **legacy)
         config = config or ServeConfig()
         self.config = config
         self.scheduler = scheduler

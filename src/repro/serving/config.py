@@ -8,27 +8,15 @@ is the single, validated, hashable source of truth: engine selection,
 replica fleet shape, KV budgets, prefix caching, migration, workload
 scaling, seeds, and the SLO knobs introduced with deadline scheduling.
 
-``ServingCluster`` accepts either a ``ServeConfig`` or (for one
-release) the legacy kwargs, which are folded into a config under a
-``DeprecationWarning`` — see :func:`ServeConfig.from_legacy_kwargs`.
+``ServingCluster`` accepts a ``ServeConfig`` only; the transitional
+legacy-kwargs shim shipped for one release after the consolidation has
+been removed.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
-
-# (legacy ServingCluster kwarg → ServeConfig field) mapping used by the
-# deprecation shim; names happen to coincide today but are kept explicit
-# so a future rename does not silently break the shim.
-LEGACY_CLUSTER_KWARGS = {
-    "n_regular": "n_regular",
-    "token_scale": "token_scale",
-    "time_scale": "time_scale",
-    "min_tokens": "min_tokens",
-    "migrate": "migrate",
-    "shared_prompt_tokens": "shared_prompt_tokens",
-}
 
 
 @dataclass(frozen=True)
@@ -113,36 +101,6 @@ class ServeConfig:
                 f"the synthesized prompt (+2 suffix tokens) must fit "
                 f"max_len {self.max_len}"
             )
-
-    @classmethod
-    def from_legacy_kwargs(cls, base: Optional["ServeConfig"] = None, **kw) -> "ServeConfig":
-        """Fold legacy ``ServingCluster`` kwargs into a config.
-
-        Parameters
-        ----------
-        base : ServeConfig, optional
-            Starting config (defaults when ``None``).
-        **kw
-            Legacy kwarg names (see :data:`LEGACY_CLUSTER_KWARGS`).
-
-        Returns
-        -------
-        ServeConfig
-            ``base`` with the mapped fields overridden.
-
-        Raises
-        ------
-        TypeError
-            On a kwarg that was never a ``ServingCluster`` parameter.
-        """
-        cfg = base or cls()
-        updates = {}
-        for name, value in kw.items():
-            if name not in LEGACY_CLUSTER_KWARGS:
-                raise TypeError(f"unexpected keyword argument {name!r}")
-            updates[LEGACY_CLUSTER_KWARGS[name]] = value
-        return replace(cfg, **updates) if updates else cfg
-
 
 def build_engines(model_cfg, cfg: ServeConfig, params=None) -> List:
     """Build the replica fleet described by ``cfg``.

@@ -37,10 +37,18 @@ shared prefix pages survive on the source as long as any other owner
 
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Optional, Set
+
+from ..analysis.kvsan import KVSanitizer
 
 
 TRASH_PAGE = 0
+
+
+def _env_sanitize() -> bool:
+    """Resolve the ``REPRO_SANITIZE`` environment default."""
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
 
 
 class PageAllocator:
@@ -62,6 +70,15 @@ class PageAllocator:
         must be at least 2.
     page_size : int
         Tokens of KV per page.
+    sanitize : bool, optional
+        Attach a :class:`~repro.analysis.kvsan.KVSanitizer` that
+        mirrors every transition in shadow state and additionally
+        validates engine-side events (writes, block tables, migration
+        tickets), raising :class:`~repro.analysis.kvsan.KVSanError` on
+        ownership violations.  Observation-only: clean runs are
+        byte-identical with it on or off.  Defaults to the
+        ``REPRO_SANITIZE`` environment variable (any value other than
+        empty/``0`` enables it).
 
     Raises
     ------
@@ -69,7 +86,12 @@ class PageAllocator:
         If ``num_pages < 2`` (there would be no allocatable page).
     """
 
-    def __init__(self, num_pages: int, page_size: int) -> None:
+    def __init__(
+        self,
+        num_pages: int,
+        page_size: int,
+        sanitize: Optional[bool] = None,
+    ) -> None:
         if num_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.num_pages = num_pages
@@ -78,6 +100,12 @@ class PageAllocator:
         self._owner: Dict[int, int] = {}  # page id -> owner tag (first live owner)
         self._ref: Dict[int, int] = {}    # page id -> live-owner count (>= 1)
         self._indexed: Set[int] = set()   # pages registered in a prefix index
+        if sanitize is None:
+            sanitize = _env_sanitize()
+        #: the attached shadow-state sanitizer (None when disabled)
+        self.sanitizer: Optional[KVSanitizer] = (
+            KVSanitizer(num_pages, page_size) if sanitize else None
+        )
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -205,7 +233,10 @@ class PageAllocator:
         """
         if n > len(self._free):
             return None
-        pages = [self._free.pop() for _ in range(n)]
+        pages = [self._free[-(i + 1)] for i in range(n)]
+        if self.sanitizer is not None:
+            self.sanitizer.on_alloc(pages, owner)
+        del self._free[len(self._free) - n:]
         for p in pages:
             self._owner[p] = owner
             self._ref[p] = 1
@@ -244,6 +275,8 @@ class PageAllocator:
                 raise ValueError(
                     f"fork of non-live page {p} (refs: {self._ref})"
                 )
+        if self.sanitizer is not None:
+            self.sanitizer.on_fork(pages, owner)
         for p in pages:
             self._ref[p] += 1
         return list(pages)
@@ -280,6 +313,8 @@ class PageAllocator:
                     f"adopt of non-indexed page {p} (indexed: "
                     f"{sorted(self._indexed)})"
                 )
+        if self.sanitizer is not None:
+            self.sanitizer.on_adopt(pages, owner)
         for p in pages:
             if p in self._ref:
                 self._ref[p] += 1
@@ -308,6 +343,10 @@ class PageAllocator:
             call) or a page this allocator never allocated — the error
             fires *before* any state is corrupted.
         """
+        if self.sanitizer is not None:
+            # validates fully before either side mutates, with journal
+            # context the allocator's own error below cannot provide
+            self.sanitizer.on_free(pages)
         counts: Dict[int, int] = {}
         for p in pages:
             counts[p] = counts.get(p, 0) + 1
@@ -346,6 +385,8 @@ class PageAllocator:
         for p in pages:
             if p not in self._ref:
                 raise ValueError(f"cannot index non-live page {p}")
+        if self.sanitizer is not None:
+            self.sanitizer.on_mark_indexed(pages)
         self._indexed.update(pages)
 
     def unmark_indexed(self, pages: List[int]) -> None:
@@ -368,6 +409,8 @@ class PageAllocator:
         for p in pages:
             if p not in self._indexed:
                 raise ValueError(f"page {p} is not indexed")
+        if self.sanitizer is not None:
+            self.sanitizer.on_unmark_indexed(pages)
         for p in pages:
             self._indexed.discard(p)
             if p not in self._ref:
@@ -413,6 +456,8 @@ class PageAllocator:
             the pool, or (with ``allow_indexed=False``) dormant pages
             remain.
         """
+        if self.sanitizer is not None:
+            self.sanitizer.crosscheck(self)
         if self._ref:
             raise AssertionError(f"leaked pages: {sorted(self._ref)}")
         dormant = self.dormant_pages
@@ -445,4 +490,7 @@ class PageAllocator:
         self._free = list(
             range(self.num_pages - 1, len(live), -1)
         )
-        return {o: n for o, n in mapping.items() if o != n}
+        moved = {o: n for o, n in mapping.items() if o != n}
+        if self.sanitizer is not None:
+            self.sanitizer.on_defrag(moved)
+        return moved

@@ -158,6 +158,14 @@ class PagedLLMEngine(LatencyProfileMixin):
         divergence and LRU eviction of dormant prefix pages under
         pressure.  Off by default — the cacheless engine is the
         byte-exact historical behaviour.
+    sanitize : bool, optional
+        Run the KV-page sanitizer: the allocator mirrors every page
+        transition in shadow state, every kernel-bound write and block
+        table is ownership-checked (use-after-free, CoW bypass,
+        aliasing), decode block tables are bounds-checked against the
+        pool, and migration tickets are validated at export.
+        Observation-only — clean runs are byte-identical either way.
+        Defaults to the ``REPRO_SANITIZE`` environment variable.
     """
 
     def __init__(
@@ -172,6 +180,7 @@ class PagedLLMEngine(LatencyProfileMixin):
         greedy: bool = True,
         prefill_chunk: int = 64,
         prefix_cache: bool = False,
+        sanitize: Optional[bool] = None,
     ) -> None:
         if not supports_paged(cfg):
             raise ValueError(
@@ -196,7 +205,8 @@ class PagedLLMEngine(LatencyProfileMixin):
         key = jax.random.key(seed)
         self.params = params if params is not None else init_params(cfg, key)[0]
 
-        self.allocator = PageAllocator(num_pages, page_size)
+        self.allocator = PageAllocator(num_pages, page_size, sanitize=sanitize)
+        self._san = self.allocator.sanitizer
         self.pools = init_paged_pools(cfg, num_pages, page_size)
         self.block_tables = np.full(
             (max_seqs, self.pages_per_seq), TRASH_PAGE, np.int32
@@ -370,6 +380,8 @@ class PagedLLMEngine(LatencyProfileMixin):
         self.seq_pages[row] = pages
         self.block_tables[row] = TRASH_PAGE
         self.block_tables[row, : len(pages)] = pages
+        if self._san is not None:
+            self._san.note_table(row, pages)
         self.lengths[row] = 0
         # skip prefill over adopted pages, but always re-run at least the
         # last prompt token: its logits seed the first decode step
@@ -484,9 +496,11 @@ class PagedLLMEngine(LatencyProfileMixin):
             fresh = self._alloc(1, owner=row)
         q = fresh[0]
         self._copy_page(p, q)
-        a.free([p])                          # drop our ref on the shared copy
         pages[pi] = q
         self.block_tables[row, pi] = q
+        if self._san is not None:
+            self._san.note_table(row, pages)
+        a.free([p])                          # drop our ref on the shared copy
         return True
 
     # -- eviction -----------------------------------------------------------
@@ -516,6 +530,8 @@ class PagedLLMEngine(LatencyProfileMixin):
         return victim != row
 
     def _release_row(self, row: int) -> None:
+        if self._san is not None:
+            self._san.drop_table(row)
         self.allocator.free(self.seq_pages.pop(row))
         self.block_tables[row] = TRASH_PAGE
         self.lengths[row] = 0
@@ -536,6 +552,8 @@ class PagedLLMEngine(LatencyProfileMixin):
                 continue
             self.seq_pages[row].append(pages[0])
             self.block_tables[row, len(self.seq_pages[row]) - 1] = pages[0]
+            if self._san is not None:
+                self._san.note_table(row, self.seq_pages[row])
         # the write target must be exclusively ours (a page-aligned shared
         # prompt can leave the boundary page adopted from the index)
         return self._ensure_exclusive(row, pi)
@@ -589,6 +607,9 @@ class PagedLLMEngine(LatencyProfileMixin):
                     break
             if not ok:
                 continue  # this row was evicted to make room; retry later
+            if self._san is not None:
+                for pi in range(pos // ps, (pos + chunk - 1) // ps + 1):
+                    self._san.note_write(row, self.seq_pages[row][pi])
             toks = jnp.asarray([req.prompt[pos : pos + chunk]], jnp.int32)
             bt = jnp.asarray(self.block_tables[row], jnp.int32)
             logits, self.pools = self._prefill_fn(pos)(
@@ -666,6 +687,11 @@ class PagedLLMEngine(LatencyProfileMixin):
             if not self._place(req):
                 break
             self.waiting.remove(req)
+            if self._san is not None:
+                self._san.check_edf_drain(
+                    getattr(req, "priority", math.inf),
+                    [getattr(r, "priority", math.inf) for r in self.waiting],
+                )
         if self.prefilling:
             self._run_prefill(self.prefill_chunk)
         if not self.active:
@@ -691,6 +717,19 @@ class PagedLLMEngine(LatencyProfileMixin):
             toks[b:] = 0
             bt[b:] = TRASH_PAGE
             lens[b:] = 0
+
+        if self._san is not None:
+            # the incoming token writes at position lengths[row]: that
+            # page must be exclusively owned, and the whole table must
+            # stay inside the pool before the kernel DMAs from it
+            from ..kernels.paged_attention import check_block_table_bounds
+
+            check_block_table_bounds(
+                bt, lens, self.num_pages, self.page_size, TRASH_PAGE
+            )
+            for row in rows:
+                pi = int(self.lengths[row]) // self.page_size
+                self._san.note_write(row, self.seq_pages[row][pi])
 
         t0 = time.perf_counter()
         logits, self.pools = self._decode(
@@ -813,6 +852,8 @@ class PagedLLMEngine(LatencyProfileMixin):
             # co-owners / prefix index; the ticket carries a copy)
             page_refcounts=[self.allocator.refcount(p) for p in pages],
         )
+        if self._san is not None:
+            self._san.validate_ticket(pages, ticket.page_refcounts)
         self._release_row(row)
         self.migrations_out += 1
         return ticket
@@ -883,6 +924,10 @@ class PagedLLMEngine(LatencyProfileMixin):
         self.seq_pages[row] = pages
         self.block_tables[row] = TRASH_PAGE
         self.block_tables[row, : len(pages)] = pages
+        if self._san is not None:
+            self._san.note_table(row, pages)
+            for p in pages:  # ticket KV scatters into every fresh page
+                self._san.note_write(row, p)
         self.lengths[row] = ticket.length
         self._tokens[row] = ticket.last_token
         self.active[row] = ticket.req

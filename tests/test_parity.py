@@ -19,7 +19,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import FCFS
-from repro.serving import PagedLLMEngine, ServingCluster
+from repro.serving import PagedLLMEngine, ServeConfig, ServingCluster
 from repro.sim import generate_workload
 from repro.sim.simulator import ClusterSim
 
@@ -64,7 +64,7 @@ def test_sim_testbed_jct_rank_parity():
         FCFS(),
         [PagedLLMEngine(get_smoke_config("stablelm_1_6b"), max_seqs=4,
                         max_len=96, page_size=16, seed=0)],
-        n_regular=3, token_scale=10.0, time_scale=10.0,
+        ServeConfig(n_regular=3, token_scale=10.0, time_scale=10.0),
     )
     res_tb = cluster.run(wl_tb)
 
@@ -104,8 +104,8 @@ def test_sim_testbed_prefill_token_rank_parity():
         [PagedLLMEngine(get_smoke_config("stablelm_1_6b"), max_seqs=4,
                         max_len=96, page_size=8, prefill_chunk=8, seed=0,
                         prefix_cache=True)],
-        n_regular=3, token_scale=10.0, time_scale=10.0,
-        shared_prompt_tokens=shared,
+        ServeConfig(n_regular=3, token_scale=10.0, time_scale=10.0,
+                    shared_prompt_tokens=shared),
     )
     res_tb = cluster.run(wl_tb)
 

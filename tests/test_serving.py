@@ -5,7 +5,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.core import FCFS, LLMSched, ProfileStore
-from repro.serving import LLMEngine, Request, ServingCluster
+from repro.serving import LLMEngine, Request, ServeConfig, ServingCluster
 from repro.sim import generate_traces, generate_workload, get_generators
 
 
@@ -68,7 +68,7 @@ def test_testbed_cluster_completes_jobs(engine_cfg):
     cluster = ServingCluster(
         LLMSched(store, epsilon=0.2, seed=0),
         [LLMEngine(engine_cfg, max_batch=4, max_len=96)],
-        n_regular=3, token_scale=30.0, time_scale=30.0,
+        ServeConfig(n_regular=3, token_scale=30.0, time_scale=30.0),
     )
     res = cluster.run(wl)
     assert len(res.jcts) == 6

@@ -21,7 +21,7 @@ Covers the SLO tentpole end to end:
   per-job attainment — and therefore goodput — is monotone in deadline
   slack;
 - **API consolidation**: unified ``RunMetrics`` aliases, ``ServeConfig``
-  validation + the legacy-kwarg deprecation shim, and
+  validation (legacy kwargs now rejected outright), and
   ``ClusterView.assemble`` gating.
 """
 
@@ -398,17 +398,12 @@ def test_build_engines_rejects_slot_migration_and_prefix_cache():
         build_engines(None, ServeConfig(engine="slot", prefix_cache=True))
 
 
-def test_legacy_kwargs_shim_maps_and_warns():
-    with pytest.warns(DeprecationWarning):
-        cluster = ServingCluster(FCFS(), engines=[], n_regular=2,
-                                 token_scale=16.0, time_scale=5.0,
-                                 shared_prompt_tokens=8)
-    assert cluster.config.n_regular == 2 and cluster.n_regular == 2
-    assert cluster.config.token_scale == 16.0
-    assert cluster.time_scale == 5.0
-    assert cluster.shared_prompt_tokens == 8
+def test_legacy_kwargs_rejected():
+    # the one-release deprecation shim is gone: pre-ServeConfig kwargs
+    # now fail fast instead of warning
     with pytest.raises(TypeError):
-        ServeConfig.from_legacy_kwargs(engines=3)   # never a cluster kwarg
+        ServingCluster(FCFS(), engines=[], n_regular=2, token_scale=16.0)
+    assert not hasattr(ServeConfig, "from_legacy_kwargs")
     # explicit config passes through untouched, no warning
     cfg = ServeConfig(n_regular=7)
     with warnings.catch_warnings():

@@ -1,0 +1,173 @@
+"""Fig. 10 (cascade) — cost-efficiency of cascade routing, simulator.
+
+Four policies serve the identical seeded trace on a 3-replica LLM
+fleet, all behind the same deterministic quality gate, and are scored
+on **cost-efficiency** (quality-accepted finished jobs per unit of
+serving cost) alongside avg JCT:
+
+- ``single_cheap``      — homogeneous cheapest pool; rejections have
+  nowhere to escalate, so out-of-depth stages ship rejected output;
+- ``single_large``      — homogeneous top-tier pool; everything is
+  accepted at the top-tier price;
+- ``cost_blind``        — heterogeneous ladder with cascade retries
+  but a cost-blind scheduler (``w_model = 0`` ablation);
+- ``llmsched_cascade``  — full cost-aware routing
+  (uncertainty-reduction-per-cost) plus cascade retries.
+
+Acceptance target: ``llmsched_cascade`` strictly beats both
+single-tier pools (and at least matches the cost-blind router) on
+cost-efficiency while keeping avg JCT within ``JCT_SLACK`` of the
+quality-matched ``single_large`` pool.
+Artifact: ``benchmarks/out/fig10_cascade.json``.
+
+CLI::
+
+    PYTHONPATH=src python -m benchmarks.fig10_cascade
+    PYTHONPATH=src python -m benchmarks.fig10_cascade --jobs 60 --strictness 0.8
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.core import DeterministicGate, LLMSched
+from repro.models.zoo import tier_spec
+from repro.sim import TIER_POOLS
+from repro.sim.simulator import ClusterSim
+from repro.sim.workloads import generate_workload
+
+from .common import emit_csv, store_for
+
+OUT_DIR = Path(__file__).parent / "out"
+
+# trace/cluster shape: the fig7 fleet with one extra LLM replica so the
+# 3-tier ladder is fully populated
+MIX = "mixed"
+ARRIVAL_RATE = 1.2
+SEEDS = (3, 11)
+CLUSTER = dict(n_regular=4, n_llm=3, max_batch=8)
+STRICTNESS = 1.0  # fully deterministic gate: out-of-depth stages always
+                  # escalate, so "merely got lucky" runs can't blur the
+                  # frontier
+JCT_SLACK = 1.5   # cascade avg JCT must stay within this factor of the
+                  # quality-matched single-tier pool (single_large — the
+                  # cheap pool's JCT prices in shipping rejected output,
+                  # so it is not a meaningful latency reference)
+
+# policy name -> (tier pool, cost-aware?)
+POLICIES: Dict[str, Tuple[Tuple[str, ...], bool]] = {
+    "single_cheap": (TIER_POOLS["cheap3"], True),
+    "single_large": (TIER_POOLS["large3"], True),
+    "cost_blind": (TIER_POOLS["ladder3"], False),
+    "llmsched_cascade": (TIER_POOLS["ladder3"], True),
+}
+
+
+def _sched(mix: str, cost_aware: bool) -> LLMSched:
+    s = LLMSched(store_for(mix), epsilon=0.2, seed=0)
+    if not cost_aware:
+        s.w_model = 0.0
+    return s
+
+
+def run(jobs: int = 60, strictness: float = STRICTNESS, seeds=SEEDS,
+        mix: str = MIX) -> dict:
+    """Run the cascade frontier sweep and write the cost artifact."""
+    out: dict = {
+        "mix": mix,
+        "jobs_per_seed": jobs,
+        "arrival_rate": ARRIVAL_RATE,
+        "strictness": strictness,
+        "seeds": list(seeds),
+        "cluster": dict(CLUSTER),
+        "pools": {n: list(p) for n, (p, _) in POLICIES.items()},
+        "tier_prices_usd_per_mtok": {
+            n: tier_spec(n).usd_per_mtok
+            for n in sorted(set(TIER_POOLS["ladder3"]))
+        },
+        "policies": {},
+    }
+    rows = []
+    for name, (pool, cost_aware) in POLICIES.items():
+        per_seed = {"avg_jct": [], "cost": [], "accepted": [],
+                    "efficiency": [], "escalations": []}
+        for seed in seeds:
+            wl = generate_workload(mix, jobs, arrival_rate=ARRIVAL_RATE,
+                                   seed=seed)
+            sim = ClusterSim(
+                _sched(mix, cost_aware), seed=seed, **CLUSTER,
+                model_tiers=pool, cascade=True,
+                gate=DeterministicGate(strictness=strictness, seed=seed),
+            )
+            r = sim.run(wl)
+            accepted = sum(
+                1 for j in r.jct_by_job
+                if r.quality_by_job.get(j, True)
+            )
+            per_seed["avg_jct"].append(r.avg_jct)
+            per_seed["cost"].append(r.total_cost)
+            per_seed["accepted"].append(accepted)
+            per_seed["efficiency"].append(r.cost_efficiency() or 0.0)
+            per_seed["escalations"].append(r.escalations)
+        entry = {
+            "avg_jct_s": round(float(np.mean(per_seed["avg_jct"])), 3),
+            "total_cost_usd": float(np.sum(per_seed["cost"])),
+            "accepted_jobs": int(np.sum(per_seed["accepted"])),
+            "jobs": jobs * len(seeds),
+            "cost_efficiency": round(
+                float(np.mean(per_seed["efficiency"])), 3
+            ),
+            "escalations": int(np.sum(per_seed["escalations"])),
+        }
+        out["policies"][name] = entry
+        rows.append([
+            name, entry["avg_jct_s"], f"{entry['total_cost_usd']:.3e}",
+            f"{entry['accepted_jobs']}/{entry['jobs']}",
+            entry["cost_efficiency"], entry["escalations"],
+        ])
+    casc = out["policies"]["llmsched_cascade"]
+    singles = ("single_cheap", "single_large")
+    beaten = [
+        n for n in singles
+        if casc["cost_efficiency"] > out["policies"][n]["cost_efficiency"]
+    ]
+    out["cost_efficiency_strictly_beats"] = beaten
+    out["beats_cost_blind"] = (
+        casc["cost_efficiency"]
+        >= out["policies"]["cost_blind"]["cost_efficiency"]
+    )
+    out["jct_vs_quality_matched_single"] = round(
+        casc["avg_jct_s"]
+        / max(out["policies"]["single_large"]["avg_jct_s"], 1e-9), 3
+    )
+    out["jct_comparable"] = out["jct_vs_quality_matched_single"] <= JCT_SLACK
+    emit_csv(
+        f"fig10_cascade ({mix} trace, strictness={strictness}, "
+        f"{len(seeds)} seeds)",
+        ["policy", "avg_jct_s", "total_cost_usd", "accepted",
+         "cost_efficiency", "escalations"],
+        rows,
+    )
+    print(f"# llmsched_cascade cost-efficiency strictly beats: {beaten} "
+          f"(>= cost_blind: {out['beats_cost_blind']})")
+    print(f"# avg JCT vs quality-matched single-tier pool: "
+          f"{out['jct_vs_quality_matched_single']}x "
+          f"(comparable={out['jct_comparable']})\n")
+    OUT_DIR.mkdir(exist_ok=True)
+    with open(OUT_DIR / "fig10_cascade.json", "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=60)
+    ap.add_argument("--strictness", type=float, default=STRICTNESS)
+    args = ap.parse_args()
+    run(jobs=args.jobs, strictness=args.strictness)

@@ -16,7 +16,8 @@ def main(argv=None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="smaller job counts (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig7,fig8,fig9,fig10,table1,roofline")
+                    help="comma list: fig1,fig7,fig8,fig9,fig10,"
+                         "fig10_cascade,table1,roofline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -39,6 +40,9 @@ def main(argv=None) -> int:
     if want("fig10"):
         from . import fig10_ablation
         fig10_ablation.main(n_jobs=50 if args.quick else 100)
+    if want("fig10_cascade"):
+        from . import fig10_cascade
+        fig10_cascade.run(jobs=40 if args.quick else 60)
     if want("fig8"):
         from . import fig8_testbed
         fig8_testbed.main(jobs=8 if args.quick else 14)

@@ -5,8 +5,9 @@ each randomness source it touches, so artifacts are reproducible and two
 modes of one comparison (cache off/on, migration off/on) see the same
 trace.  Three rules:
 
-- ``seed-missing`` — a workload/trace generator or ``simulate`` call
-  without a ``seed=`` keyword (or the corresponding positional);
+- ``seed-missing`` — a workload/trace generator, ``simulate``, or
+  quality-gate (``DeterministicGate``) call without a ``seed=``
+  keyword (or the corresponding positional);
 - ``unseeded-rng`` — ``numpy.random.default_rng()`` /
   ``jax.random.key()`` / ``PRNGKey()`` called with no argument (an
   OS-seeded RNG makes the run unreproducible);
@@ -47,7 +48,7 @@ class SeedDisciplineChecker(Checker):
     #: calls that must carry an explicit seed argument
     SEED_KW_FUNCS = {
         "generate_workload", "generate_traces", "simulate",
-        "generate_tiered_workload", "assign_slos",
+        "generate_tiered_workload", "assign_slos", "DeterministicGate",
     }
     #: positional index at which the generators accept seed
     SEED_POS = {
@@ -55,6 +56,7 @@ class SeedDisciplineChecker(Checker):
         "generate_traces": 2,
         "generate_tiered_workload": 3,
         "assign_slos": 4,
+        "DeterministicGate": 1,
     }
     #: calls that must receive at least one (seed) argument
     NONEMPTY_FUNCS = {"default_rng", "key", "PRNGKey"}

@@ -6,6 +6,7 @@
 - :mod:`repro.core.entropy`     -- entropy/MI uncertainty quantification (SIV-C)
 - :mod:`repro.core.profiler`    -- per-application profiles (BN + discretizers)
 - :mod:`repro.core.scheduler`   -- Algorithm 1 (uncertainty-aware eps-greedy)
+- :mod:`repro.core.cascade`     -- quality gates + cascade escalation model
 - :mod:`repro.core.baselines`   -- FCFS / Fair / SJF / SRTF / Argus / Carbyne / Decima
 """
 
@@ -30,6 +31,13 @@ from .entropy import (
     entropy,
     uncertainty_reduction,
 )
+from .cascade import (
+    DeterministicGate,
+    QualityGate,
+    cascade_cost,
+    fleet_ranks,
+    stage_difficulty,
+)
 from .metrics import RunMetrics
 from .profiler import AppProfile, JobTrace, ProfileStore
 from .scheduler import (
@@ -51,6 +59,8 @@ __all__ = [
     "binary_entropy", "conditional_mutual_information",
     "dynamic_stage_entropy", "entropy", "uncertainty_reduction",
     "AppProfile", "JobTrace", "ProfileStore", "RunMetrics",
+    "DeterministicGate", "QualityGate", "cascade_cost", "fleet_ranks",
+    "stage_difficulty",
     "ClusterView", "Decision", "LLMSched", "Scheduler",
     "TaskKey", "task_key",
     "FCFS", "SJF", "SRTF", "Argus", "Carbyne", "Decima", "Fair",

@@ -152,7 +152,12 @@ class Discretizer:
         if self.has_zero_bin and duration <= 0.0:
             return 0
         b = int(np.searchsorted(self.edges, duration, side="right"))
-        return b + (1 if self.has_zero_bin else 0)
+        b += 1 if self.has_zero_bin else 0
+        # a duration class never seen in training (e.g. a stage that
+        # only ever skipped, leaving just the zero bin) must clamp into
+        # the last fitted bin instead of indexing past the CPD's
+        # cardinality; a no-op for every well-fitted discretizer
+        return min(b, len(self.repr_value) - 1)
 
     def range_span(self, probs: np.ndarray, eps: float = 1e-9) -> float:
         """Range of the (posterior) duration distribution: spread of

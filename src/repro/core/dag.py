@@ -169,6 +169,12 @@ class Task:
     # Populated for LLM tasks: number of output tokens (drives batching-
     # aware calibration in the simulator).
     out_tokens: int = 0
+    # Cascade state (heterogeneous pools only; inert defaults elsewhere):
+    # a failed quality gate re-enqueues the task with its minimum model-
+    # tier *cost rank* raised one above the tier that failed, and bumps
+    # the attempt counter that keys the gate's deterministic draws.
+    tier_floor: int = 0
+    attempt: int = 0
 
 
 @dataclass

@@ -60,6 +60,19 @@ class RunMetrics:
     retractions : int
         Queued-but-undispatched scheduling decisions revisited after an
         evidence-version bump (SLO-aware schedulers only).
+    cost_by_job : dict
+        ``job_id → accumulated serving cost`` in cost units (per-token
+        tier price × generated tokens, summed over every completed LLM
+        attempt *including* attempts a quality gate rejected — wasted
+        spend is real spend).  Empty when the fleet has no tier table.
+    quality_by_job : dict
+        ``job_id → bool`` — whether every gated LLM stage of the job
+        was ultimately accepted by the quality gate (a stage that
+        exhausts the cascade at the top tier and still fails marks the
+        job ``False``).  Empty when no gate ran.
+    escalations : int
+        Cascade retries: gate-rejected stages re-enqueued one model
+        tier up.
     """
 
     jcts: List[float] = field(default_factory=list)
@@ -78,6 +91,10 @@ class RunMetrics:
     deadline_by_job: Dict[int, float] = field(default_factory=dict)
     slo_met_by_job: Dict[int, bool] = field(default_factory=dict)
     retractions: int = 0
+    # --- cost / cascade bookkeeping (empty for single-tier runs) ------
+    cost_by_job: Dict[int, float] = field(default_factory=dict)
+    quality_by_job: Dict[int, bool] = field(default_factory=dict)
+    escalations: int = 0
 
     @property
     def avg_jct(self) -> float:
@@ -123,11 +140,50 @@ class RunMetrics:
         return float(np.mean([self.slo_met_by_job[j] for j in ids]))
 
     def goodput_by_tier(self) -> Dict[str, float]:
-        """Per-tier SLO attainment over the tiers present in this run."""
+        """Per-tier SLO attainment over the tiers present in this run.
+
+        Every tier that appears in ``tier_by_job`` appears in the
+        result.  A tier whose jobs all went unfinished (preempted,
+        demoted, still queued at cutoff) has attained nothing —
+        it reports ``0.0`` rather than being silently omitted, so
+        benchmark aggregations never mistake "all missed" for
+        "tier absent".
+        """
         tiers = sorted(set(self.tier_by_job.values()))
         out: Dict[str, float] = {}
         for t in tiers:
             g = self.goodput(t)
-            if g is not None:
-                out[t] = g
+            out[t] = 0.0 if g is None else g
         return out
+
+    @property
+    def total_cost(self) -> float:
+        """Summed serving cost across jobs (0.0 without a tier table)."""
+        return float(sum(self.cost_by_job.values()))
+
+    def cost_efficiency(self) -> Optional[float]:
+        """Quality-accepted finished jobs per unit of serving cost.
+
+        The numerator counts finished jobs whose every gated stage was
+        ultimately accepted (all finished jobs when no gate ran), so a
+        pool that is merely cheap cannot win by emitting rejected
+        output; the denominator is :attr:`total_cost`.
+
+        Returns
+        -------
+        float or None
+            Accepted jobs per cost unit, or ``None`` when the run
+            recorded no cost (no tier table — efficiency undefined).
+        """
+        total = self.total_cost
+        if total <= 0.0:
+            return None
+        if self.quality_by_job:
+            ok = sum(
+                1
+                for j in self.jct_by_job
+                if self.quality_by_job.get(j, True)
+            )
+        else:
+            ok = len(self.jct_by_job)
+        return ok / total

@@ -78,6 +78,13 @@ class ClusterView:
         when no replica runs a prefix cache — the placement score then
         degenerates exactly to its cache-blind form (an all-zero list
         degenerates identically).
+    llm_model_costs : list of float, optional
+        Per-LLM-replica serving cost in *cost units per generated
+        token* (the model-zoo tier table,
+        :func:`repro.models.zoo.cost_per_token`).  Present only when
+        every replica's model resolves to a known tier; a homogeneous
+        fleet (all costs equal) contributes nothing to the placement
+        score, so cost-blind trajectories are byte-identical.
     """
 
     now: float
@@ -89,6 +96,9 @@ class ClusterView:
     llm_free_tokens: Optional[List[int]] = None
     # per-LLM-executor resident reusable-prefix tokens (None: no cache)
     llm_prefix_hit_tokens: Optional[List[int]] = None
+    # per-LLM-executor cost per generated token (None: single-tier or
+    # unresolved models)
+    llm_model_costs: Optional[List[float]] = None
 
     def llm_free_slots(self) -> int:
         """Return the total number of free batch slots across replicas.
@@ -135,6 +145,7 @@ class ClusterView:
         latency_profile: Optional[LatencyProfile] = None,
         llm_free_tokens: Optional[Sequence[Optional[int]]] = None,
         llm_prefix_hit_tokens: Optional[Sequence[Optional[int]]] = None,
+        llm_model_costs: Optional[Sequence[Optional[float]]] = None,
     ) -> "ClusterView":
         """Build a view — the single construction point for both runtimes.
 
@@ -142,9 +153,12 @@ class ClusterView:
         list by hand, which is how optional per-replica fields can
         silently drift between the two.  This helper owns the shared
         gating rule: an optional per-replica list containing *any*
-        ``None`` entry (some replica cannot report the signal) collapses
-        to ``None`` for the whole fleet, so schedulers never see a
-        partially-populated signal.
+        ``None`` or non-finite entry (some replica cannot report the
+        signal, or reports garbage) collapses to ``None`` for the whole
+        fleet, so schedulers never see a partially-populated signal; a
+        list whose length disagrees with ``llm_loads`` raises — a
+        misaligned signal would silently score replica *i* with replica
+        *j*'s headroom, which is worse than no signal at all.
 
         Parameters
         ----------
@@ -160,28 +174,47 @@ class ClusterView:
             Per-replica free KV tokens (entries may be ``None``).
         llm_prefix_hit_tokens : sequence of int or None, optional
             Per-replica resident prefix tokens (entries may be ``None``).
+        llm_model_costs : sequence of float or None, optional
+            Per-replica cost per generated token (entries may be
+            ``None`` for replicas whose model has no tier entry).
 
         Returns
         -------
         ClusterView
             The gated, fully-constructed view.
-        """
 
-        def gate(vals):
+        Raises
+        ------
+        ValueError
+            When an optional per-replica list is not one-entry-per-
+            replica.
+        """
+        llm_loads = list(llm_loads)
+
+        def gate(name, vals):
             if vals is None:
                 return None
             vals = list(vals)
-            if any(v is None for v in vals):
+            if len(vals) != len(llm_loads):
+                raise ValueError(
+                    f"{name} has {len(vals)} entries for "
+                    f"{len(llm_loads)} replicas — per-replica signals "
+                    "must align with llm_loads"
+                )
+            if any(v is None or not math.isfinite(v) for v in vals):
                 return None
             return vals
 
         return cls(
             now=now,
             free_regular=free_regular,
-            llm_loads=list(llm_loads),
+            llm_loads=llm_loads,
             latency_profile=latency_profile,
-            llm_free_tokens=gate(llm_free_tokens),
-            llm_prefix_hit_tokens=gate(llm_prefix_hit_tokens),
+            llm_free_tokens=gate("llm_free_tokens", llm_free_tokens),
+            llm_prefix_hit_tokens=gate(
+                "llm_prefix_hit_tokens", llm_prefix_hit_tokens
+            ),
+            llm_model_costs=gate("llm_model_costs", llm_model_costs),
         )
 
 
@@ -313,7 +346,7 @@ class LLMSched(Scheduler):
     LLM task is assigned a replica with the score
 
     ``score(e) = w_u · kv_headroom(e) − (1 − w_u) · load(e)
-    + w_c · prefix_hit(e)``
+    + w_c · prefix_hit(e) − w_m · (1 − ρ) · cost(e)``
 
     where ``w_u = 0.25 + 0.5·u`` and ``u ∈ [0, 1]`` is the job's
     normalized duration-bound width (entropy proxy).  Certain jobs
@@ -335,6 +368,32 @@ class LLMSched(Scheduler):
     and ``None`` cases again leave byte-identical) — including
     heterogeneous ``max_batch`` fleets — preserving the historical
     dispatcher behaviour byte-for-byte.
+
+    Cost-aware model routing (heterogeneous pools): when the view
+    carries per-replica per-token costs (``llm_model_costs``, from the
+    model-zoo tier table) *and* they differ across the fleet, the score
+    gains ``− w_m · (1 − ρ) · ĉ(e)`` where ``ĉ(e)`` is the replica's
+    cost normalized by the fleet maximum and ``ρ ∈ [0, 1]`` is the
+    stage's routing signal — the mean of the job's duration-bound
+    uncertainty ``u`` and the stage's cached BN uncertainty reduction
+    ``R̂`` normalized by this round's maximum.  The term is a price
+    penalty scaled by how *routine* the stage is: stages expected to
+    reduce much uncertainty (or belonging to wide-bound jobs) have
+    ``ρ → 1`` and place cost-indifferently — the evidence they produce
+    is worth the premium — while routine stages (``ρ → 0``) crowd onto
+    the cheap tiers, keeping premium capacity free for work that earns
+    it.  That is uncertainty-reduction-per-cost routing.  A homogeneous fleet (costs absent or all equal)
+    contributes exactly nothing, so single-tier trajectories are
+    byte-identical to the cost-blind scheduler.  Cascade re-admission:
+    a task whose ``tier_floor`` was raised by a failed quality gate is
+    only placed on replicas whose cost *rank* meets the floor — the
+    retry provably runs one tier up.  Floors are also *learned* per
+    (app, stage template): once a stage type has been escalated to
+    rank ``r``, later first attempts of the same type start at ``r``
+    directly, skipping the attempts a deterministic gate is guaranteed
+    to reject (cost-aware routing only — the ``w_model = 0`` ablation
+    keeps paying them, which is exactly the frontier gap fig10
+    measures).
 
     SLO-tiered deadline scheduling: jobs carrying a
     :class:`repro.core.dag.SLO` are scheduled against their absolute
@@ -410,6 +469,11 @@ class LLMSched(Scheduler):
     #: headroom for high-uncertainty jobs.
     w_cache = 0.2
 
+    #: Weight of the cost-aware routing term on heterogeneous pools.
+    #: ``0.0`` yields the cost-blind router ablation (placement ignores
+    #: tier prices; tier floors from cascade escalation still bind).
+    w_model = 0.3
+
     def __init__(
         self,
         profiles: ProfileStore,
@@ -454,6 +518,13 @@ class LLMSched(Scheduler):
         # job's evidence version: it only changes on dispatch/completion/
         # reveal events, all of which bump the version)
         self._ready_cache: Dict[int, Tuple[int, List[Stage]]] = {}
+        # learned cascade floors: (app, stage template) → the highest
+        # tier rank a gate rejection has forced that stage type up to.
+        # Future first attempts of the same type start there instead of
+        # re-paying the doomed cheap attempts (cost-aware routing only;
+        # stays empty on homogeneous or unpriced fleets).
+        self._tier_prior: Dict[Tuple[str, str], int] = {}
+        self._app_by_job: Dict[int, str] = {}
 
     # -- helpers -------------------------------------------------------------
     def _version(self, job: Job) -> Optional[int]:
@@ -669,6 +740,7 @@ class LLMSched(Scheduler):
 
         # multi-replica placement: duration-bound width as the entropy
         # proxy (same arrays that drove the grouping above)
+        self._app_by_job = {j.job_id: j.app.name for j in jobs}
         self._place_llm(dec, view, self._job_uncertainty(jobs, los, his))
 
         if self.check_invariants:
@@ -836,15 +908,21 @@ class LLMSched(Scheduler):
         view: ClusterView,
         uncertainty: Dict[int, float],
     ) -> None:
-        """Assign each LLM task a replica via the uncertainty/KV/cache score.
+        """Assign each LLM task a replica via the routing score.
 
         Projects batch occupancy and KV headroom forward as tasks are
         placed, so one round's placements never overcommit a replica.
-        Without ``llm_free_tokens`` the score reduces to least-loaded
-        (prefix residency breaks ties when known, then lowest index) —
-        identical to the pre-placement dispatchers whenever the view
-        carries no (or all-zero) prefix info, keeping seeded
-        single/multi-replica sim trajectories unchanged.
+        Without ``llm_free_tokens`` *and* without differing per-replica
+        costs the score reduces to least-loaded (prefix residency
+        breaks ties when known, then lowest index) — identical to the
+        pre-placement dispatchers whenever the view carries no (or
+        all-zero) prefix info, keeping seeded single/multi-replica sim
+        trajectories unchanged.  Tasks carrying a cascade
+        ``tier_floor`` are restricted to replicas whose cost rank meets
+        the floor whenever the fleet's tiers are known; on cost-aware
+        heterogeneous fleets the floor a retry carries is also
+        remembered per (app, stage template), so later first attempts
+        of a proven-hard stage type start at the proven tier.
         """
         n = len(view.llm_loads)
         if n == 0 or not dec.llm:
@@ -862,40 +940,95 @@ class LLMSched(Scheduler):
             if hit_tok is not None
             else [0.0] * n
         )
+        # cost signal: dense rank per replica (0 = cheapest tier) plus a
+        # fleet-max-normalized cost.  A homogeneous fleet (or a view
+        # without costs) gates the routing term off entirely — not
+        # merely uniformly — so such runs are byte-identical to the
+        # cost-blind score.
+        costs = view.llm_model_costs
+        cost_norm: Optional[List[float]] = None
+        ranks = [0] * n
+        if costs is not None and len(set(costs)) > 1:
+            cmax = max(costs)
+            order = sorted(set(costs))
+            ranks = [order.index(c) for c in costs]
+            if cmax > 0.0 and self.w_model != 0.0:
+                cost_norm = [c / cmax for c in costs]
+        tiers_known = costs is not None
+        # round-max of the cached stage uncertainty reductions: the
+        # normalizer of the routing signal ρ
+        ur_max = max(self._ur_cache.values(), default=0.0)
         for t in dec.llm:
             if t.job_id in self._demoted:
                 # provably deadline-infeasible: runs only on leftover
                 # capacity — reserve no KV headroom for it (the set is
                 # empty for SLO-less workloads, keeping this a no-op)
                 continue
+            floor = getattr(t, "tier_floor", 0)
+            if cost_norm is not None:
+                # escalation-floor learning (cost-aware routing only):
+                # a cascade retry proves its stage *type* out-of-depth
+                # below its floor, so future first attempts of the same
+                # (app, stage) start at the proven tier instead of
+                # re-paying the doomed cheap attempts
+                key = (self._app_by_job.get(t.job_id, ""), t.stage_name)
+                if floor > 0:
+                    if floor > self._tier_prior.get(key, 0):
+                        self._tier_prior[key] = floor
+                else:
+                    prior = self._tier_prior.get(key, 0)
+                    if prior:
+                        floor = t.tier_floor = prior  # runtimes honour it
             u = uncertainty.get(t.job_id, 0.5)
             w = 0.25 + 0.5 * u
             best = None
-            if free_tok is None:
+            if free_tok is None and cost_norm is None:
                 # no KV accounting: exact least-loaded by absolute batch
                 # (decode latency is l(b) in the absolute batch size) —
                 # byte-identical to the historical dispatchers, including
                 # heterogeneous max_batch fleets; resident prefix tokens
                 # (when reported) only break exact-load ties
-                cands = [e for e in range(n) if proj_b[e] < mbs[e]]
+                cands = [
+                    e for e in range(n)
+                    if proj_b[e] < mbs[e]
+                    and not (tiers_known and ranks[e] < floor)
+                ]
                 if cands:
                     best = min(
                         cands, key=lambda e: (proj_b[e], -hit_norm[e], e)
                     )
             else:
+                if cost_norm is not None:
+                    ur = self._ur_cache.get((t.job_id, t.stage_name), 0.0)
+                    rhat = ur / ur_max if ur_max > 0.0 else 0.0
+                    rho = 0.5 * (u + rhat)
                 best_score = -math.inf
                 for e in range(n):
                     if mbs[e] <= 0 or proj_b[e] >= mbs[e]:
                         continue
-                    if free_tok[e] <= 0:
+                    if tiers_known and ranks[e] < floor:
+                        continue  # cascade retry must run one tier up
+                    if free_tok is not None and free_tok[e] <= 0:
                         continue  # no KV left: placing guarantees refusal
                     load = proj_b[e] / mbs[e]
-                    kv = free_tok[e] / max(max(free_tok), 1)
+                    kv = (
+                        free_tok[e] / max(max(free_tok), 1)
+                        if free_tok is not None
+                        else 0.0
+                    )
                     score = (
                         w * kv
                         - (1.0 - w) * load
                         + self.w_cache * hit_norm[e]
                     )
+                    if cost_norm is not None:
+                        # premium capacity costs score in proportion to
+                        # how *routine* the stage is: high-ρ stages are
+                        # cost-indifferent (their evidence is worth the
+                        # premium), routine ones crowd onto cheap tiers
+                        score -= (
+                            self.w_model * (1.0 - rho) * cost_norm[e]
+                        )
                     if score > best_score + 1e-12:
                         best, best_score = e, score
             if best is None:

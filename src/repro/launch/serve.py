@@ -20,6 +20,14 @@ gains the cache-affinity term.  Pair it with ``--shared-prompt N`` so
 each application's tasks actually share an N-token system prompt —
 the workload shape where the cache pays.
 
+``--models a,b`` declares a **heterogeneous pool** (one model name per
+replica, priced through the model-zoo tier table) — the scheduler then
+routes stages by uncertainty-reduction-per-cost.  Add
+``--gate-strictness s`` to score stage outputs with a deterministic
+quality gate, and ``--cascade`` to escalate rejections one cost tier
+up; the run then reports serving cost, escalations, and
+cost-efficiency.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --mix planning --jobs 12 --scheduler llmsched
@@ -34,7 +42,7 @@ from __future__ import annotations
 import argparse
 
 from repro.configs import get_smoke_config
-from repro.core import LLMSched, ProfileStore, make_baselines
+from repro.core import DeterministicGate, LLMSched, ProfileStore, make_baselines
 from repro.serving import ServeConfig, ServingCluster, build_engines
 
 from repro.sim import generate_traces, generate_workload, get_generators
@@ -56,10 +64,13 @@ def config_from_args(args) -> ServeConfig:
     n = args.replicas if args.replicas is not None else args.engines
     if args.kv_pages:
         kv_pages = tuple(int(x) for x in args.kv_pages.split(","))
+    models = tuple(args.models.split(",")) if args.models else None
     try:
         return ServeConfig(
             engine=args.engine,
             replicas=n,
+            models=models,
+            cascade=args.cascade,
             max_batch=args.max_batch,
             max_len=96,
             page_size=args.page_size,
@@ -105,6 +116,17 @@ def main(argv=None) -> int:
     ap.add_argument("--shared-prompt", type=int, default=0,
                     help="tokens of per-application shared system prompt "
                          "prepended to every LLM task's request")
+    ap.add_argument("--models", default=None,
+                    help="comma list of per-replica model names "
+                         "(heterogeneous pool), e.g. "
+                         "stablelm_1_6b,internlm2_20b; overrides --arch")
+    ap.add_argument("--cascade", action="store_true",
+                    help="escalate quality-gate rejections one cost tier "
+                         "up (needs --models naming >1 tier and a "
+                         "--gate-strictness gate)")
+    ap.add_argument("--gate-strictness", type=float, default=None,
+                    help="attach a DeterministicGate with this strictness "
+                         "in [0,1] to score stage outputs")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--regular", type=int, default=4)
@@ -127,14 +149,24 @@ def main(argv=None) -> int:
     apps = [g.template for g in gens.values()]
     store = ProfileStore().fit(apps, generate_traces(args.mix, 300, seed=7))
 
-    cfg = get_smoke_config(args.arch)
+    cfg = None if serve_cfg.models else get_smoke_config(args.arch)
     try:
         engines = build_engines(cfg, serve_cfg)
     except ValueError as e:
         raise SystemExit(str(e))
     sched = build_scheduler(args.scheduler, store, args.epsilon, args.seed,
                             plan_ahead_s=serve_cfg.plan_ahead_s)
-    cluster = ServingCluster(sched, engines, serve_cfg)
+    gate = None
+    if args.gate_strictness is not None:
+        try:
+            gate = DeterministicGate(
+                strictness=args.gate_strictness, seed=args.seed
+            )
+        except ValueError as e:
+            raise SystemExit(str(e))
+    elif serve_cfg.cascade:
+        raise SystemExit("--cascade requires --gate-strictness")
+    cluster = ServingCluster(sched, engines, serve_cfg, gate=gate)
     if args.slo:
         wl = generate_tiered_workload(
             args.mix, args.jobs, arrival_rate=0.9, seed=args.seed,
@@ -153,6 +185,14 @@ def main(argv=None) -> int:
             for t, g in sorted(res.goodput_by_tier().items())
         )
     )
+    cost_part = ""
+    if res.cost_by_job:
+        eff = res.cost_efficiency()
+        cost_part = (
+            f" cost={res.total_cost:.3e}"
+            f" escalations={res.escalations}"
+            + (f" cost_eff={eff:.1f}" if eff is not None else "")
+        )
     print(
         f"[serve] scheduler={args.scheduler} mix={args.mix} "
         f"replicas={len(engines)} jobs={len(res.jcts)} "
@@ -160,7 +200,7 @@ def main(argv=None) -> int:
         f"tokens={res.tokens_generated} overhead={res.avg_overhead_ms:.2f}ms "
         f"preemptions={res.preemptions} migrations={res.migrations} "
         f"prefill={res.prefill_tokens} prefill_saved={res.prefill_saved_tokens}"
-        f"{slo_part}"
+        f"{slo_part}{cost_part}"
     )
     return 0
 

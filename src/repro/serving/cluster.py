@@ -32,9 +32,11 @@ import time
 import zlib
 from typing import List, Optional, Sequence, Tuple
 
+from ..core.cascade import QualityGate, fleet_ranks
 from ..core.dag import Job, Stage, Task, TaskState
 from ..core.metrics import RunMetrics
 from ..core.scheduler import ClusterView, Decision, Scheduler
+from ..models.zoo import tier_spec
 from ..sim.workloads import GeneratedJob, get_generators, reveal_after_stage
 from .config import ServeConfig
 from .engine import LLMEngine, Request
@@ -65,6 +67,14 @@ class ServingCluster:
     rebalancer : Rebalancer, optional
         Custom policy instance; built with defaults when
         ``config.migrate`` is set and none is given.
+    gate : QualityGate, optional
+        Verifier run over every finished LLM task whose replica has
+        known tier economics.  With ``config.cascade`` and a
+        heterogeneous priced fleet, a rejection re-enqueues the task
+        one cost tier up (``Task.tier_floor``); otherwise rejections
+        mark the job in ``RunMetrics.quality_by_job``.  ``None``
+        (default) disables gating — byte-identical to the historical
+        cluster.
     """
 
     def __init__(
@@ -74,6 +84,7 @@ class ServingCluster:
         config: Optional[ServeConfig] = None,
         *,
         rebalancer: Optional[Rebalancer] = None,
+        gate: Optional[QualityGate] = None,
     ) -> None:
         config = config or ServeConfig()
         self.config = config
@@ -88,6 +99,30 @@ class ServingCluster:
         self.shared_prompt_tokens = int(config.shared_prompt_tokens)
         if self.migrate and self.rebalancer is None:
             self.rebalancer = Rebalancer(engines)
+        self.gate = gate
+        self.cascade = bool(config.cascade)
+        # per-replica tier economics: None entries (models absent from
+        # the zoo price table, e.g. ad-hoc test configs) gate the cost
+        # signal off in ClusterView.assemble rather than invent a price
+        self._tier_specs = [
+            tier_spec(e.cfg.name) if getattr(e, "cfg", None) is not None
+            else None
+            for e in engines
+        ]
+        self._costs = [
+            None if s is None else s.usd_per_mtok / 1e6
+            for s in self._tier_specs
+        ]
+        # escalation floors need the whole fleet priced; same dense
+        # cost-rank rule the scheduler applies, so runtime escalation
+        # and scheduler placement agree on what "one tier up" means
+        if self._costs and all(c is not None for c in self._costs):
+            self._ranks: Optional[List[int]] = fleet_ranks(self._costs)
+            self._rank_top = max(self._ranks)
+        else:
+            self._ranks = None
+            self._rank_top = 0
+        self._eidx = {id(e): i for i, e in enumerate(engines)}
 
     def _prompt_for(self, task: Task, app_name: str) -> List[int]:
         """Synthesize the engine prompt for an LLM task.
@@ -207,6 +242,16 @@ class ServingCluster:
                 cands = [e for e in self.engines if e.can_admit()]
                 if not cands:
                     break
+                # cascade floor: an escalated task may only run on
+                # replicas at or above its minimum cost rank (floors
+                # only arise when the whole fleet is priced)
+                if self._ranks is not None and t.tier_floor > 0:
+                    cands = [
+                        e for e in cands
+                        if self._ranks[self._eidx[id(e)]] >= t.tier_floor
+                    ]
+                    if not cands:
+                        continue  # eligible tiers busy; retry next round
                 cands.sort(
                     key=lambda e: (
                         e.batch_size,
@@ -225,15 +270,6 @@ class ServingCluster:
                 prompt = self._prompt_for(t, job_by_id[t.job_id].app.name)
                 task = t
 
-                def _done(req: Request, task=task) -> None:
-                    res.tokens_generated += len(req.out_tokens)
-                    res.prefill_tokens += req.prefill_tokens
-                    res.prefill_by_job[task.job_id] = (
-                        res.prefill_by_job.get(task.job_id, 0)
-                        + req.prefill_tokens
-                    )
-                    finish_task(task)
-
                 # deadline-aware admission ordering: SLO jobs carry
                 # their scaled deadline as the request priority, so a
                 # paged engine drains its waiting queue EDF-first;
@@ -245,7 +281,6 @@ class ServingCluster:
                     prompt=prompt,
                     max_new_tokens=n_tok,
                     submitted_at=now(),
-                    on_finish=_done,
                     priority=(
                         math.inf if slo is None
                         else slo.deadline / self.time_scale
@@ -254,8 +289,61 @@ class ServingCluster:
                 # can_admit() is a cheap pre-filter; a paged engine may
                 # still refuse a multi-page prompt, so fall through to
                 # the next-best candidate before giving up on the task
-                if not any(e.admit(req) for e in cands):
+                admitted = None
+                for e in cands:
+                    if e.admit(req):
+                        admitted = e
+                        break
+                if admitted is None:
                     break  # no engine can take it; retry next round
+                # on_finish needs the admitting replica's tier (cost
+                # accounting + gate quality); assigning after admission
+                # is safe — finishes only ever fire inside step()
+                ei = self._eidx[id(admitted)]
+
+                def _done(req: Request, task=task, ei=ei) -> None:
+                    res.tokens_generated += len(req.out_tokens)
+                    res.prefill_tokens += req.prefill_tokens
+                    res.prefill_by_job[task.job_id] = (
+                        res.prefill_by_job.get(task.job_id, 0)
+                        + req.prefill_tokens
+                    )
+                    spec = self._tier_specs[ei]
+                    if spec is not None:
+                        # real spend: tokens actually generated on this
+                        # attempt, at the serving replica's tier price
+                        res.cost_by_job[task.job_id] = (
+                            res.cost_by_job.get(task.job_id, 0.0)
+                            + len(req.out_tokens) * spec.usd_per_mtok / 1e6
+                        )
+                    if self.gate is not None and spec is not None:
+                        job = job_by_id[task.job_id]
+                        ok = self.gate.passes(
+                            job.app.name, task.stage_name, task.index,
+                            task.attempt, spec.quality,
+                        )
+                        can_up = (
+                            self.cascade
+                            and self._ranks is not None
+                            and self._ranks[ei] < self._rank_top
+                        )
+                        if not ok and can_up:
+                            # cascade escalation: re-enqueue one cost
+                            # tier up; the attempt bump re-keys the
+                            # gate's deterministic draw
+                            task.tier_floor = self._ranks[ei] + 1
+                            task.attempt += 1
+                            task.state = TaskState.PENDING
+                            task.start_time = -1.0
+                            job.bump_evidence()
+                            res.escalations += 1
+                            return
+                        res.quality_by_job[task.job_id] = (
+                            res.quality_by_job.get(task.job_id, True) and ok
+                        )
+                    finish_task(task)
+
+                req.on_finish = _done
                 t.state = TaskState.RUNNING
                 t.start_time = now()
                 job = job_by_id[t.job_id]
@@ -289,6 +377,7 @@ class ServingCluster:
                 latency_profile=prof,
                 llm_free_tokens=free_tok,
                 llm_prefix_hit_tokens=hit_tok,
+                llm_model_costs=self._costs,
             )
 
         # ------------------------- main loop -------------------------

@@ -29,7 +29,20 @@ class ServeConfig:
         ``"slot"`` (dense per-slot KV) or ``"paged"`` (block-table
         pool with capacity-based admission).
     replicas : int
-        Number of LLM engine replicas (shared weights).
+        Number of LLM engine replicas (shared weights unless ``models``
+        declares a heterogeneous pool).
+    models : tuple of str, optional
+        Per-replica model names (``repro.configs`` spellings), one per
+        replica — a heterogeneous pool mixing capability/cost tiers.
+        ``None`` (default) builds the homogeneous fleet from the model
+        config handed to :func:`build_engines`.  Replicas sharing a
+        name share weights; live migration only moves requests between
+        same-name replicas.
+    cascade : bool
+        Escalate quality-gate rejections one cost tier up (requires a
+        gate on the cluster and a fleet whose model names all price in
+        ``repro.models.zoo.MODEL_TIERS``).  Off by default: rejections
+        then only mark the job in ``RunMetrics.quality_by_job``.
     max_batch : int
         Per-replica concurrent-request capacity.
     max_len : int
@@ -66,6 +79,8 @@ class ServeConfig:
 
     engine: str = "slot"
     replicas: int = 1
+    models: Optional[Tuple[str, ...]] = None
+    cascade: bool = False
     max_batch: int = 4
     max_len: int = 96
     page_size: int = 16
@@ -87,6 +102,12 @@ class ServeConfig:
             raise ValueError(f"engine must be 'slot' or 'paged', got {self.engine!r}")
         if self.replicas < 1:
             raise ValueError("replicas must be >= 1")
+        if self.models is not None:
+            object.__setattr__(self, "models", tuple(str(m) for m in self.models))
+            if len(self.models) != self.replicas:
+                raise ValueError(
+                    f"models needs {self.replicas} entries, got {len(self.models)}"
+                )
         if self.kv_pages is not None:
             object.__setattr__(self, "kv_pages", tuple(int(p) for p in self.kv_pages))
             if len(self.kv_pages) != self.replicas:
@@ -106,18 +127,24 @@ def build_engines(model_cfg, cfg: ServeConfig, params=None) -> List:
     """Build the replica fleet described by ``cfg``.
 
     Slot engines get per-replica seeds (``cfg.seed + i``); paged
-    engines share one set of weights (initialised from ``cfg.seed``
-    when ``params`` is not supplied), which is what makes live
-    migration lossless.
+    engines share one set of weights per *model name* (initialised from
+    ``cfg.seed`` when ``params`` is not supplied), which is what makes
+    live migration between same-name replicas lossless.
+
+    With ``cfg.models`` set, the fleet is heterogeneous: replica ``i``
+    runs the smoke config of ``cfg.models[i]`` and ``model_cfg`` is
+    ignored (pass ``None``).  Same-name replicas still share weights.
 
     Parameters
     ----------
     model_cfg
-        Model configuration (e.g. from ``repro.configs``).
+        Model configuration (e.g. from ``repro.configs``); ignored
+        when ``cfg.models`` is set.
     cfg : ServeConfig
         Fleet shape and engine options.
     params : optional
-        Pre-initialised model parameters shared by paged replicas.
+        Pre-initialised model parameters shared by paged replicas
+        (homogeneous fleets only).
 
     Returns
     -------
@@ -128,41 +155,61 @@ def build_engines(model_cfg, cfg: ServeConfig, params=None) -> List:
     ------
     ValueError
         When ``migrate``/``prefix_cache`` are requested for slot
-        engines (both need the paged KV pool).
+        engines (both need the paged KV pool), or when ``params`` is
+        supplied for a heterogeneous fleet.
     """
     if cfg.engine != "paged" and cfg.migrate:
         raise ValueError("migrate=True requires engine='paged'")
     if cfg.engine != "paged" and cfg.prefix_cache:
         raise ValueError("prefix_cache=True requires engine='paged'")
+    if cfg.models is not None:
+        if params is not None:
+            raise ValueError(
+                "params cannot be shared across a heterogeneous fleet; "
+                "leave it None when cfg.models is set"
+            )
+        from ..configs import get_smoke_config
+
+        model_cfgs = [get_smoke_config(m) for m in cfg.models]
+    else:
+        model_cfgs = [model_cfg] * cfg.replicas
     if cfg.engine == "paged":
         from .paged_engine import PagedLLMEngine
 
-        if params is None:
-            import jax
+        import jax
 
-            from ..models import init_params
+        from ..models import init_params
 
-            params = init_params(model_cfg, jax.random.key(cfg.seed))[0]
+        # one weight set per distinct model (dict insertion order keeps
+        # init deterministic in fleet order)
+        params_by_name = {}
+        for mc in model_cfgs:
+            if mc.name not in params_by_name:
+                params_by_name[mc.name] = (
+                    params
+                    if params is not None
+                    else init_params(mc, jax.random.key(cfg.seed))[0]
+                )
         return [
             PagedLLMEngine(
-                model_cfg,
+                mc,
                 max_seqs=cfg.max_batch,
                 max_len=cfg.max_len,
                 page_size=cfg.page_size,
                 num_pages=cfg.kv_pages[i] if cfg.kv_pages else None,
-                params=params,
+                params=params_by_name[mc.name],
                 prefix_cache=cfg.prefix_cache,
             )
-            for i in range(cfg.replicas)
+            for i, mc in enumerate(model_cfgs)
         ]
     from .engine import LLMEngine
 
     return [
         LLMEngine(
-            model_cfg,
+            mc,
             max_batch=cfg.max_batch,
             max_len=cfg.max_len,
             seed=cfg.seed + i,
         )
-        for i in range(cfg.replicas)
+        for i, mc in enumerate(model_cfgs)
     ]

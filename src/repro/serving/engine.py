@@ -46,6 +46,12 @@ class Request:
     # waiting queue (SLO jobs carry their scaled deadline — EDF);
     # inf (default) keeps the historical FIFO order byte-for-byte
     priority: float = math.inf
+    # fleet-global first-admission stamp (set by the first engine that
+    # places the request; preserved across eviction and migration).
+    # Equal-priority waiting requests drain in this order — the deque
+    # itself reflects *eviction* order, and a migrated-in request
+    # evicted late would otherwise jump ahead of an older waiter.
+    arrival_seq: int = -1
 
     def done(self) -> bool:
         return self.finished_at >= 0

@@ -41,6 +41,7 @@ a pooled page store + per-request block tables:
 
 from __future__ import annotations
 
+import itertools
 import math
 import time
 from collections import deque
@@ -62,6 +63,11 @@ from ..models.paged import (
 from .engine import LatencyProfileMixin, Request
 from .paged_cache import PageAllocator, TRASH_PAGE
 from .prefix_cache import RadixPrefixIndex
+
+
+# Fleet-global admission stamp: comparable across engines so migrated
+# requests keep their original age in any waiting queue they land in.
+_ARRIVAL_SEQ = itertools.count()
 
 
 def _bucket(b: int, cap: int) -> int:
@@ -374,6 +380,8 @@ class PagedLLMEngine(LatencyProfileMixin):
                 self.allocator.free(cached)
             return False
         self.free_rows.pop(0)
+        if req.arrival_seq < 0:  # first placement anywhere in the fleet
+            req.arrival_seq = next(_ARRIVAL_SEQ)
         if self.prefix_index is not None:
             self.prefix_index.record_hit(len(cached))
         pages = cached + fresh
@@ -673,16 +681,24 @@ class PagedLLMEngine(LatencyProfileMixin):
             ``on_finish`` callbacks already fired.
         """
         # deadline-aware re-admission: drain the waiting queue lowest
-        # priority-value first; ``min`` breaks ties toward the queue
-        # head, so the all-priorities-inf case (no SLOs anywhere)
-        # degenerates to the historical FIFO ``popleft`` byte-for-byte.
-        # Head-of-line blocking on a failed place is intentional:
-        # admitting a lower-priority request past a stuck urgent one
-        # would hand it the very pages the urgent one needs.
+        # priority-value first, ties broken by *fleet arrival order*
+        # (``arrival_seq``), NOT deque position — the deque reflects
+        # eviction order (``appendleft``), and after a live migration a
+        # younger-arrival request evicted late sits at the head, so a
+        # positional tie-break would re-admit it ahead of an older
+        # equal-deadline waiter.  With no SLOs anywhere (all priorities
+        # inf) single-engine eviction preserves arrival order, so this
+        # still degenerates to the historical FIFO ``popleft``
+        # byte-for-byte.  Head-of-line blocking on a failed place is
+        # intentional: admitting a lower-priority request past a stuck
+        # urgent one would hand it the very pages the urgent one needs.
         while self.waiting and self.free_rows:
             req = min(
                 self.waiting,
-                key=lambda r: getattr(r, "priority", math.inf),
+                key=lambda r: (
+                    getattr(r, "priority", math.inf),
+                    getattr(r, "arrival_seq", -1),
+                ),
             )
             if not self._place(req):
                 break

@@ -12,15 +12,17 @@ from .workloads import (
     SequenceSorting,
     TaskAutomation,
     WebSearch,
+    TIER_POOLS,
     generate_traces,
     generate_workload,
     get_generators,
+    tier_pool,
 )
 
 __all__ = [
     "ClusterSim", "SimResult", "default_latency_profile", "simulate",
     "ALL_GENERATORS", "WORKLOAD_MIXES", "AppGenerator", "CodeGeneration",
     "DocMerging", "GeneratedJob", "LLMCompiler", "SequenceSorting",
-    "TaskAutomation", "WebSearch", "generate_traces", "generate_workload",
-    "get_generators",
+    "TaskAutomation", "WebSearch", "TIER_POOLS", "generate_traces",
+    "generate_workload", "get_generators", "tier_pool",
 ]

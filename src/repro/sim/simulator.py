@@ -131,8 +131,33 @@ class ClusterSim:
     prefix_cache_capacity_tokens : float, optional
         Per-replica cap on resident shared-prefix tokens; the least
         recently used application's prefix is evicted beyond it.
+    model_tiers : sequence of str, optional
+        Per-replica model-zoo names (length ``n_llm``; any spelling
+        :func:`repro.models.zoo.resolve_tier` accepts) declaring a
+        heterogeneous pool.  Each replica decodes at its tier's
+        ``latency_scale`` × the baseline ``l(b)``, charges its tier's
+        per-token cost into ``RunMetrics.cost_by_job`` on every
+        completed LLM attempt, and advertises the cost through
+        ``ClusterView.llm_model_costs`` so LLMSched can route by
+        uncertainty-reduction-per-cost.  ``None`` (default) keeps the
+        historical single-tier model byte-for-byte; a homogeneous list
+        (every replica the same tier) also schedules byte-identically
+        when its ``latency_scale`` is 1.0, since the cost signal gates
+        itself off.
+    gate : QualityGate, optional
+        Pluggable verifier over LLM stage outputs (requires
+        ``model_tiers`` — the gate judges against the serving tier's
+        quality).  A rejected output either escalates (``cascade=True``
+        and a higher tier exists) or marks the job quality-failed in
+        ``RunMetrics.quality_by_job``.
+    cascade : bool, optional
+        Re-enqueue gate-rejected LLM tasks with ``tier_floor`` one cost
+        rank above the tier that failed (counted in
+        ``RunMetrics.escalations``).  Requires ``gate``.
     seed : int, optional
-        RNG seed for fault/straggler injection.
+        RNG seed for fault/straggler injection.  The quality gate's
+        draws are hash-derived per attempt and consume nothing from
+        this stream, so enabling the gate perturbs no other event.
     """
 
     def __init__(
@@ -151,6 +176,9 @@ class ClusterSim:
         shared_prompt_tokens: float = 0.0,
         prefix_cache: bool = False,
         prefix_cache_capacity_tokens: float = math.inf,
+        model_tiers: Optional[Sequence[str]] = None,
+        gate=None,
+        cascade: bool = False,
         seed: int = 0,
     ) -> None:
         self.scheduler = scheduler
@@ -200,6 +228,42 @@ class ClusterSim:
             raise ValueError(
                 "shared_prompt_tokens cannot exceed prompt_tokens_per_task"
             )
+        # heterogeneous pool: per-replica tier economics from the model
+        # zoo.  Tier names must resolve — a typo'd model silently priced
+        # at 0 would corrupt every cost artifact.
+        self.gate = gate
+        self.cascade = bool(cascade)
+        if model_tiers is None:
+            if gate is not None or cascade:
+                raise ValueError(
+                    "gate/cascade require model_tiers (the gate judges "
+                    "against the serving tier's quality)"
+                )
+            self._tier_cost: Optional[List[float]] = None
+            self._tier_quality: Optional[List[float]] = None
+            self._ranks: Optional[List[int]] = None
+            self._lat_scale: List[float] = [1.0] * n_llm
+        else:
+            from ..core.cascade import fleet_ranks
+            from ..models.zoo import tier_spec
+
+            if len(model_tiers) != n_llm:
+                raise ValueError(
+                    f"model_tiers list length {len(model_tiers)} "
+                    f"!= n_llm {n_llm}"
+                )
+            if cascade and gate is None:
+                raise ValueError("cascade=True requires a gate")
+            specs = []
+            for name in model_tiers:
+                spec = tier_spec(name)
+                if spec is None:
+                    raise ValueError(f"unknown model tier: {name!r}")
+                specs.append(spec)
+            self._tier_cost = [s.usd_per_mtok / 1e6 for s in specs]
+            self._tier_quality = [s.quality for s in specs]
+            self._ranks = fleet_ranks(self._tier_cost)
+            self._lat_scale = [s.latency_scale for s in specs]
         self.kv_relief_quantum = 64.0
         self.kv_admission_reserve = 256.0
         if self._kv is not None and any(
@@ -286,7 +350,9 @@ class ClusterSim:
                 b = llm_batch(e)
                 if b == 0:
                     continue
-                rate = 1.0 / self.profile.l(b)  # tokens/sec per request
+                # tokens/sec per request; the tier's latency_scale
+                # stretches l(b) (×1.0 exactly for single-tier pools)
+                rate = 1.0 / (self.profile.l(b) * self._lat_scale[e])
                 for rt in llm_running[e]:
                     rt.remaining_tokens -= dt * rate
 
@@ -296,7 +362,7 @@ class ClusterSim:
                 b = llm_batch(e)
                 if b == 0:
                     continue
-                per_tok = self.profile.l(b)
+                per_tok = self.profile.l(b) * self._lat_scale[e]
                 for rt in llm_running[e]:
                     t = now + max(0.0, rt.remaining_tokens) * per_tok
                     if t < best_t:
@@ -356,8 +422,8 @@ class ClusterSim:
                     if sheddable_victim(e) is not None:
                         return now, e  # already over: relieve immediately
                     continue  # only the exempt oldest holds KV
-                # usage grows at b tasks x 1/l(b) tokens/s each
-                t = now + head * self.profile.l(b) / b
+                # usage grows at b tasks x 1/(l(b)·scale) tokens/s each
+                t = now + head * self.profile.l(b) * self._lat_scale[e] / b
                 if t < best_t:
                     best_t, best_e = t, e
             return best_t, best_e
@@ -435,6 +501,8 @@ class ClusterSim:
                 def admissible(x: int) -> bool:
                     if llm_batch(x) >= self._mb[x]:
                         return False
+                    if self._ranks is not None and self._ranks[x] < t.tier_floor:
+                        return False  # cascade retry must run one tier up
                     head = kv_headroom(x)
                     return head is None or head >= self.kv_admission_reserve
 
@@ -513,6 +581,7 @@ class ClusterSim:
                     if self.prefix_cache
                     else None
                 ),
+                llm_model_costs=self._tier_cost,
             )
             t0 = _time.perf_counter()
             dec = self.scheduler.schedule(active, view)
@@ -577,10 +646,52 @@ class ClusterSim:
                     if slot2 is not None and slot2[1] is task:
                         reg_running[e2] = None
             elif llm_rt is not None:
-                llm_running[llm_rt.executor].remove(llm_rt)
-                self._finish_task(
-                    llm_rt.task, now, job_by_id, on_stage_complete, active, res
-                )
+                e = llm_rt.executor
+                llm_running[e].remove(llm_rt)
+                task = llm_rt.task
+                if self._tier_cost is not None:
+                    # every completed attempt pays its tier's price —
+                    # including attempts the gate is about to reject
+                    # (wasted spend is real spend)
+                    res.cost_by_job[task.job_id] = (
+                        res.cost_by_job.get(task.job_id, 0.0)
+                        + task.out_tokens * self._tier_cost[e]
+                    )
+                if self.gate is not None:
+                    app = job_by_id[task.job_id].app.name
+                    ok = self.gate.passes(
+                        app, task.stage_name, task.index,
+                        task.attempt, self._tier_quality[e],
+                    )
+                    if (
+                        not ok
+                        and self.cascade
+                        and self._ranks[e] < max(self._ranks)
+                    ):
+                        # cascade retry: back to PENDING one tier up;
+                        # the prompt re-enters through dispatch and hits
+                        # the destination's prefix cache where resident
+                        task.tier_floor = self._ranks[e] + 1
+                        task.attempt += 1
+                        task.state = TaskState.PENDING
+                        task.start_time = -1.0
+                        job_by_id[task.job_id].bump_evidence()
+                        res.escalations += 1
+                    else:
+                        # accepted, or rejected with nowhere to go
+                        # (top tier / no cascade): output stands, the
+                        # job's quality records the verdict
+                        res.quality_by_job[task.job_id] = (
+                            res.quality_by_job.get(task.job_id, True) and ok
+                        )
+                        self._finish_task(
+                            task, now, job_by_id, on_stage_complete,
+                            active, res,
+                        )
+                else:
+                    self._finish_task(
+                        task, now, job_by_id, on_stage_complete, active, res
+                    )
 
             # straggler mitigation: speculatively re-issue regular tasks
             # that exceed straggler_factor x their nominal duration on a

@@ -689,3 +689,43 @@ def generate_traces(mix: str, n_jobs: int, seed: int = 1234) -> List[JobTrace]:
         g = gens[gj.job.app.name]
         out.append(g.trace_of(gj))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous replica-pool presets (cascade benchmark currency)
+# ---------------------------------------------------------------------------
+#: Named per-replica model-tier pools shared by the fig10 cascade
+#: benchmark and the sim tests, so "the 3-replica cheap/mid/top fleet"
+#: means the same thing everywhere.  Keys of each entry are model-zoo
+#: names accepted by :func:`repro.models.zoo.resolve_tier`.
+TIER_POOLS: Dict[str, Tuple[str, ...]] = {
+    # one replica per rung of a cheap → capable ladder
+    "ladder3": ("stablelm_1_6b", "internlm2_20b", "kimi_k2_1t_a32b"),
+    # single-tier control pools of the ladder's extremes
+    "cheap3": ("stablelm_1_6b",) * 3,
+    "large3": ("kimi_k2_1t_a32b",) * 3,
+}
+
+
+def tier_pool(name: str, n_llm: Optional[int] = None) -> Tuple[str, ...]:
+    """Return a named replica pool, optionally resized.
+
+    Parameters
+    ----------
+    name : str
+        A :data:`TIER_POOLS` key.
+    n_llm : int, optional
+        Desired replica count; the pool is cycled to length (so
+        ``ladder3`` at 6 replicas repeats the ladder twice).  ``None``
+        keeps the preset size.
+
+    Returns
+    -------
+    tuple of str
+        Per-replica model names for ``ClusterSim(model_tiers=...)`` or
+        ``ServeConfig(models=...)``.
+    """
+    pool = TIER_POOLS[name]
+    if n_llm is None:
+        return pool
+    return tuple(pool[i % len(pool)] for i in range(int(n_llm)))

@@ -94,8 +94,25 @@ class _Lists(SearchStrategy):
         return out
 
 
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements) -> None:
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty collection")
+
+    def draw(self, rnd: random.Random) -> Any:
+        return rnd.choice(self.elements)
+
+    def boundary(self) -> List[Any]:
+        return self.elements[:2]
+
+
 def integers(min_value: int = 0, max_value: int = 100) -> SearchStrategy:
     return _Integers(min_value, max_value)
+
+
+def sampled_from(elements) -> SearchStrategy:
+    return _SampledFrom(elements)
 
 
 def floats(min_value: float = 0.0, max_value: float = 1.0, **_kw) -> SearchStrategy:
@@ -111,6 +128,7 @@ strategies = types.ModuleType("hypothesis.strategies")
 strategies.integers = integers
 strategies.floats = floats
 strategies.lists = lists
+strategies.sampled_from = sampled_from
 strategies.SearchStrategy = SearchStrategy
 
 

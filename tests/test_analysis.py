@@ -225,6 +225,13 @@ def test_seed_missing_rule():
     assert _rules(_lint('tr = generate_traces("chain", 50)\n')) == [
         "seed-missing"
     ]
+    # quality gates are an RNG stream too: their per-attempt draws are
+    # keyed by the gate seed, so call sites must pin it explicitly
+    assert _rules(_lint(
+        "g = DeterministicGate(strictness=0.7)\n"
+    )) == ["seed-missing"]
+    assert _lint("g = DeterministicGate(strictness=0.7, seed=3)\n") == []
+    assert _lint("g = DeterministicGate(0.7, 3)\n") == []
 
 
 def test_unseeded_rng_rule():

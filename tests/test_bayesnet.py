@@ -168,3 +168,21 @@ def test_bn_inference_matches_bruteforce(seed):
     post_bf = sliced.sum(axis=axes2)
     post_bf = post_bf / post_bf.sum()
     np.testing.assert_allclose(post_ve, post_bf, atol=1e-9)
+
+
+def test_discretizer_clamps_unseen_duration_class():
+    """Regression: a stage whose training history was all zeros (never
+    executed) fits a single zero bin; observing it *execute* at runtime
+    produced bin 1 and indexed past the CPD's cardinality deep inside
+    factor reduction.  Out-of-support durations now clamp to the last
+    fitted bin."""
+    from repro.core.bayesnet import fit_discretizer
+
+    d = fit_discretizer([0.0, 0.0, 0.0])
+    assert d.transform(0.0) == 0
+    assert d.transform(5.0) == 0          # clamped, not 1
+    # well-fitted discretizers are untouched by the clamp
+    d2 = fit_discretizer([0.0, 1.0, 2.0, 3.0, 4.0])
+    assert d2.transform(0.0) == 0
+    assert d2.transform(2.5) == d2.transform(2.5)
+    assert d2.transform(1e9) == len(d2.repr_value) - 1

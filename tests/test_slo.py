@@ -78,7 +78,7 @@ _GOLD = {
 }
 
 
-def _trajectory(kv, wl, sched):
+def _trajectory(kv, wl, sched, **sim_kw):
     """Run the seeded fig7-style sim, hashing the decision stream."""
     jid = {gj.job.job_id: i for i, gj in enumerate(wl)}
     log = []
@@ -97,7 +97,7 @@ def _trajectory(kv, wl, sched):
 
     sched.schedule = rec
     sim = ClusterSim(sched, n_regular=4, n_llm=2, max_batch=8,
-                     kv_budget_tokens=kv, seed=0)
+                     kv_budget_tokens=kv, seed=0, **sim_kw)
     res = sim.run(wl)
     return (hashlib.sha256(repr(log).encode()).hexdigest(), len(log),
             round(res.avg_jct, 6)), res
@@ -422,3 +422,66 @@ def test_cluster_view_assemble_gates_partial_signals():
     assert v.llm_prefix_hit_tokens == [16, 32]
     v2 = ClusterView.assemble(now=0.0, free_regular=0, llm_loads=[])
     assert v2.llm_free_tokens is None and v2.llm_prefix_hit_tokens is None
+
+
+def test_cluster_view_assemble_rejects_length_mismatch():
+    """Regression: a per-replica signal list of the wrong length was
+    passed through silently, misaligning every replica's score with a
+    neighbour's KV headroom.  Now it fails fast."""
+    with pytest.raises(ValueError):
+        ClusterView.assemble(now=0.0, free_regular=1, llm_loads=[(0, 4)],
+                             llm_free_tokens=[128, 256])
+    with pytest.raises(ValueError):
+        ClusterView.assemble(now=0.0, free_regular=1,
+                             llm_loads=[(0, 4), (1, 4)],
+                             llm_model_costs=[1e-7])
+
+
+def test_cluster_view_assemble_gates_cost_signal():
+    """Mixed per-replica cost signals (some replicas unpriced, or a
+    non-finite price) must gate the whole cost term off — a partially
+    priced fleet cannot be routed by cost."""
+    v = ClusterView.assemble(now=0.0, free_regular=0,
+                             llm_loads=[(0, 4), (1, 4)],
+                             llm_model_costs=[1e-7, None])
+    assert v.llm_model_costs is None
+    v2 = ClusterView.assemble(now=0.0, free_regular=0,
+                              llm_loads=[(0, 4), (1, 4)],
+                              llm_model_costs=[1e-7, float("nan")])
+    assert v2.llm_model_costs is None
+    v3 = ClusterView.assemble(now=0.0, free_regular=0,
+                              llm_loads=[(0, 4), (1, 4)],
+                              llm_model_costs=[1e-7, 2e-7])
+    assert v3.llm_model_costs == [1e-7, 2e-7]
+
+
+def test_goodput_by_tier_reports_zero_for_unfinished_tier():
+    """Regression: a tier whose jobs all went unfinished (no entries in
+    ``slo_met_by_job``) was silently omitted from ``goodput_by_tier``,
+    so benchmark aggregations mistook "all missed" for "tier absent"."""
+    r = RunMetrics()
+    r.tier_by_job = {1: "interactive", 2: "batch"}
+    r.slo_met_by_job = {1: True}          # the batch job never finished
+    assert r.goodput_by_tier() == {"interactive": 1.0, "batch": 0.0}
+
+
+def test_uniform_tier_pool_preserves_golden_trajectory(monkeypatch):
+    """A homogeneous *priced* pool must gate the cost signal off: the
+    decision stream matches the unpriced PR 5 golden byte-for-byte
+    (latency_scale pinned to 1.0 so tier economics are the only delta),
+    while cost accounting still runs."""
+    from repro.models import zoo
+    monkeypatch.setitem(
+        zoo.MODEL_TIERS, "unit_tier", zoo.TierSpec(0.10, 0.99, 1.0)
+    )
+    wl = generate_workload("mixed", 20, arrival_rate=1.2, seed=11)
+    sig, res = _trajectory(
+        None, wl, _sched(plan_ahead_s=30.0, slo_aware=True),
+        model_tiers=("unit_tier", "unit_tier"),
+    )
+    assert sig == _GOLD["no_kv"], (
+        "uniform per-replica costs perturbed the placement score: "
+        f"{sig} != {_GOLD['no_kv']}"
+    )
+    assert res.total_cost > 0.0            # accounting ran regardless
+    assert res.cost_efficiency() is not None

@@ -2,6 +2,10 @@
 
 ``python -m benchmarks.run [--quick] [--only fig7,table1,...]``
 Emits CSV blocks (name, header, rows) to stdout.
+
+``--only`` names are validated against the registry: an unknown name is
+a hard error (it used to be silently skipped, so a typo like
+``--only fig7_sl0`` ran nothing and exited 0 — green CI, no data).
 """
 
 from __future__ import annotations
@@ -11,44 +15,94 @@ import sys
 import time
 
 
+def _fig1(quick):
+    from . import fig1_characterization
+    fig1_characterization.main(n_jobs=200 if quick else 400)
+
+
+def _fig7(quick):
+    from . import fig7_simulation
+    fig7_simulation.main(job_counts=(40, 80) if quick else (50, 100, 200))
+
+
+def _fig7_slo(quick):
+    from . import fig7_slo
+    fig7_slo.run(jobs=30 if quick else 60)
+
+
+def _table1(quick):
+    from . import table1_overhead
+    table1_overhead.main(n_jobs=30 if quick else 60)
+
+
+def _fig9(quick):
+    from . import fig9_sensitivity
+    fig9_sensitivity.main(n_jobs=40 if quick else 80)
+
+
+def _fig10(quick):
+    from . import fig10_ablation
+    fig10_ablation.main(n_jobs=50 if quick else 100)
+
+
+def _fig10_cascade(quick):
+    from . import fig10_cascade
+    fig10_cascade.run(jobs=40 if quick else 60)
+
+
+def _fig8(quick):
+    from . import fig8_testbed
+    fig8_testbed.main(jobs=8 if quick else 14)
+
+
+def _fig11(quick):
+    from . import fig11_kernels
+    fig11_kernels.run(quick=quick)
+
+
+def _roofline(quick):
+    from . import roofline
+    roofline.main()
+
+
+# insertion order == execution order (cheap sims first, testbed last)
+ENTRIES = {
+    "fig1": _fig1,
+    "fig7": _fig7,
+    "fig7_slo": _fig7_slo,
+    "table1": _table1,
+    "fig9": _fig9,
+    "fig10": _fig10,
+    "fig10_cascade": _fig10_cascade,
+    "fig8": _fig8,
+    "fig11": _fig11,
+    "roofline": _roofline,
+}
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="smaller job counts (CI-sized)")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig1,fig7,fig8,fig9,fig10,"
-                         "fig10_cascade,table1,roofline")
+                    help="comma list of entries: " + ",".join(ENTRIES))
     args = ap.parse_args(argv)
-    only = set(args.only.split(",")) if args.only else None
-
-    def want(name: str) -> bool:
-        return only is None or name in only
+    only = None
+    if args.only:
+        only = {name.strip() for name in args.only.split(",") if name.strip()}
+        unknown = sorted(only - set(ENTRIES))
+        if unknown:
+            ap.error(
+                f"unknown benchmark name(s): {', '.join(unknown)} "
+                f"(known: {', '.join(ENTRIES)})"
+            )
+        if not only:
+            ap.error("--only given but no benchmark names parsed")
 
     t0 = time.perf_counter()
-    if want("fig1"):
-        from . import fig1_characterization
-        fig1_characterization.main(n_jobs=200 if args.quick else 400)
-    if want("fig7"):
-        from . import fig7_simulation
-        fig7_simulation.main(job_counts=(40, 80) if args.quick else (50, 100, 200))
-    if want("table1"):
-        from . import table1_overhead
-        table1_overhead.main(n_jobs=30 if args.quick else 60)
-    if want("fig9"):
-        from . import fig9_sensitivity
-        fig9_sensitivity.main(n_jobs=40 if args.quick else 80)
-    if want("fig10"):
-        from . import fig10_ablation
-        fig10_ablation.main(n_jobs=50 if args.quick else 100)
-    if want("fig10_cascade"):
-        from . import fig10_cascade
-        fig10_cascade.run(jobs=40 if args.quick else 60)
-    if want("fig8"):
-        from . import fig8_testbed
-        fig8_testbed.main(jobs=8 if args.quick else 14)
-    if want("roofline"):
-        from . import roofline
-        roofline.main()
+    for name, entry in ENTRIES.items():
+        if only is None or name in only:
+            entry(args.quick)
     print(f"# total benchmark wall time: {time.perf_counter()-t0:.0f}s")
     return 0
 

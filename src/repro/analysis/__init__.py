@@ -28,6 +28,7 @@ from .framework import (  # noqa: F401
     run_paths,
 )
 from . import determinism as _determinism  # noqa: F401  (registers checkers)
+from . import perf as _perf  # noqa: F401  (registers checkers)
 from . import seeds as _seeds  # noqa: F401  (registers checkers)
 
 _LAZY = {

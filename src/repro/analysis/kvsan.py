@@ -25,6 +25,9 @@ for context — on:
   rows' block tables;
 - **ticket drift** — a migration ticket whose recorded
   ``page_refcounts`` disagree with allocator state at export time;
+- **scale-pool mismatch** — with int8 KV pages, exporting (or adopting
+  into a ticket) a page whose per-page scales were never written: its
+  int8 payload would dequantize through stale scales on the importer;
 - **EDF violation** — draining the paged engine's waiting queue past a
   strictly-more-urgent (lower priority value) request;
 - **shadow divergence** — :meth:`crosscheck` compares the shadow
@@ -76,6 +79,7 @@ class KVSanitizer:
         self._indexed: Set[int] = set()
         self._free: Set[int] = set(range(1, num_pages))
         self._tables: Dict[int, List[int]] = {}   # row -> block-table pages
+        self._scaled: Set[int] = set()   # pages with written per-page scales
         self._journal: Deque[str] = deque(maxlen=journal_len)
         self._op = 0
         #: writes validated (clean-run observability)
@@ -160,6 +164,7 @@ class KVSanitizer:
                 del self._ref[p]
                 if p not in self._indexed:
                     self._free.add(p)
+                    self._scaled.discard(p)  # freed content is garbage again
         self._log(f"free {list(pages)}")
 
     def on_mark_indexed(self, pages: Sequence[int]) -> None:
@@ -179,6 +184,7 @@ class KVSanitizer:
             self._indexed.discard(p)
             if p not in self._ref:
                 self._free.add(p)
+                self._scaled.discard(p)  # freed content is garbage again
         self._log(f"unmark_indexed {list(pages)}")
 
     def on_defrag(self, mapping: Dict[int, int]) -> None:
@@ -186,6 +192,7 @@ class KVSanitizer:
         remap = lambda p: mapping.get(p, p)  # noqa: E731
         self._ref = {remap(p): r for p, r in self._ref.items()}
         self._indexed = {remap(p) for p in self._indexed}
+        self._scaled = {remap(p) for p in self._scaled}
         self._tables = {
             row: [remap(p) for p in pages]
             for row, pages in self._tables.items()
@@ -210,8 +217,19 @@ class KVSanitizer:
         """Forget row's block table (row released or exported)."""
         self._tables.pop(row, None)
 
-    def note_write(self, row: int, page: int) -> None:
+    def note_write(self, row: int, page: int, quantized: bool = False) -> None:
         """Validate one engine write into ``page`` on behalf of ``row``.
+
+        Parameters
+        ----------
+        row : int
+            The writing sequence row.
+        page : int
+            The physical page written.
+        quantized : bool, optional
+            True on int8-KV engines: the write also updated the page's
+            per-page scale pool entries, so the page joins the shadow
+            ``scaled`` set that :meth:`validate_scale_export` checks.
 
         Raises
         ------
@@ -255,7 +273,47 @@ class KVSanitizer:
                 f"block-table aliasing: exclusive page {page} written by "
                 f"row {row} but registered to rows {holders}"
             )
+        if quantized:
+            self._scaled.add(page)
         self.writes_checked += 1
+
+    def note_scale_copy(self, src: int, dst: int) -> None:
+        """Mirror a copy-on-write page copy's effect on the scale pools.
+
+        The engine's CoW copies every pool leaf — including ``k_s``/
+        ``v_s`` on int8 engines — so ``dst`` inherits ``src``'s scale
+        validity.  A no-op when ``src`` has no recorded scales.
+        """
+        if src in self._scaled:
+            self._scaled.add(dst)
+            self._log(f"scale-copy {src} -> {dst}")
+
+    def validate_scale_export(self, pages: Sequence[int]) -> None:
+        """Check every exported page carries written per-page scales.
+
+        Called by ``export_request`` on int8-KV engines before the
+        ticket leaves: an exported page whose scale-pool entries were
+        never written would dequantize its int8 payload through stale
+        scales on the importing replica — silent KV corruption that
+        surfaces tokens later.
+
+        Parameters
+        ----------
+        pages : sequence of int
+            The exported pages, block-table order.
+
+        Raises
+        ------
+        KVSanError
+            Naming the first page with no recorded quantized write.
+        """
+        for p in pages:
+            if p not in self._scaled:
+                self._fail(
+                    f"scale-pool mismatch: exporting page {p} but its "
+                    "per-page scales were never written (int8 payload "
+                    "would dequantize through stale scales)"
+                )
 
     def validate_ticket(
         self, pages: Sequence[int], refcounts: Optional[Sequence[int]]

@@ -72,16 +72,66 @@ def paged_decode_attention(
     block_tables: jax.Array,
     lengths: jax.Array,
     scale: Optional[float] = None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
     impl: str = "auto",
 ) -> jax.Array:
-    """Decode attention over a paged KV pool via per-request block tables."""
+    """Decode attention over a paged KV pool via per-request block tables.
+
+    With ``k_scales``/``v_scales`` the pools are int8 and dequantized
+    per page inside the kernel (oracle: dequantize-then-attend).
+    """
     if _pick(impl) == "pallas":
         from .paged_attention import paged_decode_attention as _pda
 
-        return _pda(q, k_pages, v_pages, block_tables, lengths, scale=scale)
+        return _pda(
+            q, k_pages, v_pages, block_tables, lengths, scale=scale,
+            k_scales=k_scales, v_scales=v_scales,
+        )
     return _ref.paged_decode_attention_ref(
-        q, k_pages, v_pages, block_tables, lengths, scale=scale
+        q, k_pages, v_pages, block_tables, lengths, scale=scale,
+        k_scales=k_scales, v_scales=v_scales,
     )
+
+
+def paged_prefill_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_table: jax.Array,
+    past: int,
+    scale: Optional[float] = None,
+    k_scales: Optional[jax.Array] = None,
+    v_scales: Optional[jax.Array] = None,
+    impl: str = "auto",
+) -> jax.Array:
+    """Fused chunked-prefill attention over one request's block table.
+
+    The chunk's K/V must already be scattered into the pools; queries
+    attend causally to paged history + the in-chunk segment.  With
+    ``k_scales``/``v_scales`` the pools are int8 (see decode).
+    """
+    if _pick(impl) == "pallas":
+        from .paged_attention import paged_prefill_attention as _ppa
+
+        return _ppa(
+            q, k_pages, v_pages, block_table, past, scale=scale,
+            k_scales=k_scales, v_scales=v_scales,
+        )
+    return _ref.paged_prefill_attention_ref(
+        q, k_pages, v_pages, block_table, past, scale=scale,
+        k_scales=k_scales, v_scales=v_scales,
+    )
+
+
+def quantize_kv(x: jax.Array):
+    """Symmetric int8 KV quantization (per token, per kv head).
+
+    Pure elementwise math — one spec shared by the paged engine's
+    quantize-on-scatter and the oracles, so there is nothing to
+    dispatch; see :func:`repro.kernels.ref.quantize_kv_ref`.
+    """
+    return _ref.quantize_kv_ref(x)
 
 
 def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5,

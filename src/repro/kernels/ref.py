@@ -99,10 +99,78 @@ def paged_decode_attention_ref(
     block_tables: jax.Array,  # (B, pages_per_seq) int32
     lengths: jax.Array,       # (B,) int32 — valid tokens (incl. current)
     scale: Optional[float] = None,
+    k_scales: Optional[jax.Array] = None,  # (P, page_size, K) f32
+    v_scales: Optional[jax.Array] = None,
 ) -> jax.Array:
+    if k_scales is not None:
+        k_pages = dequantize_pages_ref(k_pages, k_scales)
+        v_pages = dequantize_pages_ref(v_pages, v_scales)
     k_dense = gather_pages(k_pages, block_tables)
     v_dense = gather_pages(v_pages, block_tables)
     return decode_attention_ref(q, k_dense, v_dense, lengths, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Paged chunked-prefill attention: C chunk queries of a single request vs
+# the context pages named by its block table (history + in-chunk segment,
+# both already scattered into the pool)
+# ---------------------------------------------------------------------------
+def paged_prefill_attention_ref(
+    q: jax.Array,            # (C, H, hd) — one request's chunk queries
+    k_pages: jax.Array,      # (P, page_size, K, hd)
+    v_pages: jax.Array,      # (P, page_size, K, hd_v)
+    block_table: jax.Array,  # (pages_per_seq,) int32
+    past: int,               # prompt tokens already prefilled (chunk offset)
+    scale: Optional[float] = None,
+    k_scales: Optional[jax.Array] = None,  # (P, page_size, K) f32
+    v_scales: Optional[jax.Array] = None,
+) -> jax.Array:
+    if k_scales is not None:
+        k_pages = dequantize_pages_ref(k_pages, k_scales)
+        v_pages = dequantize_pages_ref(v_pages, v_scales)
+    C = q.shape[0]
+    ps = k_pages.shape[1]
+    ctx = past + C
+    n_ctx_pages = -(-ctx // ps)
+    bt = block_table[None, :n_ctx_pages]
+    k_ctx = gather_pages(k_pages, bt)            # (1, n_ctx_pages*ps, K, hd)
+    v_ctx = gather_pages(v_pages, bt)
+    kv_len = jnp.array([ctx], jnp.int32)
+    out = attention_ref(
+        q[None], k_ctx, v_ctx, causal=True, scale=scale,
+        q_offset=past, kv_len=kv_len,
+    )
+    return out[0]
+
+
+# ---------------------------------------------------------------------------
+# int8 KV-page quantization: symmetric per (token-slot, kv-head) scales,
+# stored page-major alongside the pools ("per-page scale pools")
+# ---------------------------------------------------------------------------
+def quantize_kv_ref(x: jax.Array):
+    """Quantize K/V values to int8 with per (…, kv-head) symmetric scales.
+
+    ``x`` is ``(..., K, hd)``; returns ``(q int8 (..., K, hd),
+    scales f32 (..., K))`` with ``scale = max(|x|, 1e-8) / 127`` over the
+    head dim — the same spec as the slot cache's ``_q8_kv``.  Each token
+    is quantized exactly once, at write time, from its exact value, so
+    page contents are a pure function of the tokens they hold (chunk
+    boundaries, prefix-cache adoption, and migration cannot change the
+    bits — the differential token-equality suites rely on this).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(xf / scale[..., None]), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_pages_ref(
+    pages: jax.Array,    # (P, page_size, K, hd) int8
+    scales: jax.Array,   # (P, page_size, K) f32
+) -> jax.Array:
+    """Reconstruct float32 pages from an int8 pool and its scale pool."""
+    return pages.astype(jnp.float32) * scales[..., None]
 
 
 # ---------------------------------------------------------------------------

@@ -75,6 +75,7 @@ def config_from_args(args) -> ServeConfig:
             max_len=96,
             page_size=args.page_size,
             kv_pages=kv_pages,
+            kv_dtype=args.kv_dtype,
             migrate=args.migrate,
             prefix_cache=args.prefix_cache,
             shared_prompt_tokens=args.shared_prompt,
@@ -110,6 +111,10 @@ def main(argv=None) -> int:
     ap.add_argument("--kv-pages", default=None,
                     help="comma list of per-replica page-pool sizes "
                          "(heterogeneous KV budgets), e.g. 13,49")
+    ap.add_argument("--kv-dtype", default="fp32", choices=["fp32", "int8"],
+                    help="paged KV page storage: fp32 keeps compute-dtype "
+                         "pages, int8 quantizes with per-page scales "
+                         "(~1.6x tokens per byte; paged only)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="shared-prefix KV reuse via a radix index "
                          "(paged only)")

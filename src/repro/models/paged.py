@@ -13,8 +13,20 @@ Three entry points, mirroring ``transformer.py``'s cache contract:
 - :func:`paged_prefill_chunk` — run one prompt chunk (attending to the
   pages written by earlier chunks) and scatter its K/V into the pools;
   chunked prefill is what lets long prompts interleave with decode steps;
+  attention goes through the fused paged-prefill kernel (block tables
+  via scalar prefetch) — the chunk never materializes a dense context;
 - :func:`paged_decode_step` — one decode token for a batch of requests,
   writing through block tables and attending via the paged kernel.
+
+Pools come in two flavours selected by ``kv_dtype``: ``"fp32"`` stores
+pages in the model's compute dtype (the historical layout, bit-for-bit
+identical to the slot path), and ``"int8"`` stores int8 pages plus
+per-page scale pools (``k_s``/``v_s``, one float32 scale per token slot
+per kv head) that both kernels dequantize on the fly.  Quantization
+happens exactly once per token, at scatter time, from the exact value —
+page bits are therefore a pure function of the tokens they hold, which
+keeps prefix-cache adoption, copy-on-write, and migration
+token-deterministic under int8.
 
 Supported architectures are the pure-attention decoder families (every
 layer ``attn+{mlp,dense_mlp,moe}``, no prefix/cross/MLA/recurrent
@@ -54,30 +66,44 @@ def supports_paged(cfg: ModelConfig) -> bool:
     return all(k == "attn" for k in kinds)
 
 
+KV_DTYPES = ("fp32", "int8")
+
+
 def init_paged_pools(
-    cfg: ModelConfig, num_pages: int, page_size: int
+    cfg: ModelConfig, num_pages: int, page_size: int, kv_dtype: str = "fp32"
 ) -> Pools:
     """Per-pattern-position page pools, stacked over superblocks.
 
     Shape mirrors ``init_cache``'s ``blocks`` tree: pools["blocks"][j] is
-    ``{"k","v": (n_sb, P, page_size, K, hd)}``.
+    ``{"k","v": (n_sb, P, page_size, K, hd)}``.  With ``kv_dtype="int8"``
+    the K/V leaves are int8 and per-page scale pools ride alongside:
+    ``{"k_s","v_s": (n_sb, P, page_size, K) float32}``, initialised to a
+    neutral scale of 1 (never-written slots dequantize to finite values
+    the kernels' masking then discards).
     """
     if not supports_paged(cfg):
         raise ValueError(
             f"config {cfg.name!r} is not paged-KV compatible "
             "(requires a pure-attention decoder, fp/bf16 cache)"
         )
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}")
     _, pat, n_sb = _scan_layout(cfg)
     K, hd = cfg.n_kv_heads, cfg.hd
-    dt = cfg.jdtype
-    blocks = {
-        str(j): {
-            "k": jnp.zeros((n_sb, num_pages, page_size, K, hd), dt),
-            "v": jnp.zeros((n_sb, num_pages, page_size, K, hd), dt),
-        }
-        for j in range(pat)
-    }
-    return {"blocks": blocks}
+    kv_shape = (n_sb, num_pages, page_size, K, hd)
+
+    def one_pool():
+        if kv_dtype == "int8":
+            return {
+                "k": jnp.zeros(kv_shape, jnp.int8),
+                "v": jnp.zeros(kv_shape, jnp.int8),
+                "k_s": jnp.ones(kv_shape[:-1], jnp.float32),
+                "v_s": jnp.ones(kv_shape[:-1], jnp.float32),
+            }
+        return {"k": jnp.zeros(kv_shape, cfg.jdtype),
+                "v": jnp.zeros(kv_shape, cfg.jdtype)}
+
+    return {"blocks": {str(j): one_pool() for j in range(pat)}}
 
 
 def _scatter_tokens(
@@ -89,6 +115,37 @@ def _scatter_tokens(
     flat = pool.reshape(P * ps, K, hd)
     flat = flat.at[flat_idx].set(values.astype(flat.dtype))
     return flat.reshape(P, ps, K, hd)
+
+
+def _scatter_scales(
+    pool: jax.Array,       # (P, ps, K) f32 scale pool
+    flat_idx: jax.Array,   # (T,) int32
+    scales: jax.Array,     # (T, K)
+) -> jax.Array:
+    P, ps, K = pool.shape
+    flat = pool.reshape(P * ps, K)
+    flat = flat.at[flat_idx].set(scales.astype(flat.dtype))
+    return flat.reshape(P, ps, K)
+
+
+def _write_kv(pool: Dict[str, jax.Array], flat_idx, k, v):
+    """Scatter one batch of K/V tokens, quantizing when the pool is int8.
+
+    ``k``/``v`` are ``(T, K, hd)``; returns the updated pool dict.
+    """
+    if "k_s" in pool:
+        kq, ks = ops.quantize_kv(k)
+        vq, vs = ops.quantize_kv(v)
+        return {
+            "k": _scatter_tokens(pool["k"], flat_idx, kq),
+            "v": _scatter_tokens(pool["v"], flat_idx, vq),
+            "k_s": _scatter_scales(pool["k_s"], flat_idx, ks),
+            "v_s": _scatter_scales(pool["v_s"], flat_idx, vs),
+        }
+    return {
+        "k": _scatter_tokens(pool["k"], flat_idx, k),
+        "v": _scatter_tokens(pool["v"], flat_idx, v),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -119,14 +176,14 @@ def paged_decode_step(
         pos = lengths[:, None]
         q = L.rope(q, pos, cfg.rope_theta)
         k = L.rope(k, pos, cfg.rope_theta)
-        pool_k = _scatter_tokens(pool["k"], write_flat, k[:, 0])
-        pool_v = _scatter_tokens(pool["v"], write_flat, v[:, 0])
+        new_pool = _write_kv(pool, write_flat, k[:, 0], v[:, 0])
         out = ops.paged_decode_attention(
-            q[:, 0], pool_k, pool_v, block_tables, lengths + 1
+            q[:, 0], new_pool["k"], new_pool["v"], block_tables, lengths + 1,
+            k_scales=new_pool.get("k_s"), v_scales=new_pool.get("v_s"),
         )
         x = x + out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
         x = _apply_ffn(p, cfg, kinds[j], x, decoding=True)
-        return x, {"k": pool_k, "v": pool_v}
+        return x, new_pool
 
     def body(x, xs):
         new_blk = {}
@@ -161,25 +218,20 @@ def paged_prefill_chunk(
 
     The chunk's queries attend causally to (already-paged history + the
     chunk itself); its K/V are scattered into the pools at positions
-    ``past .. past+C``.  ``past`` is static per jit specialization —
-    chunk boundaries are multiples of the chunk size, so the number of
-    distinct compilations is tiny.  Returned logits cover the whole
-    chunk, ``(1, C, V)``.
+    ``past .. past+C`` and attention runs through the fused paged-prefill
+    kernel over the block table — no dense context view is gathered.
+    ``past`` is static per jit specialization — chunk boundaries are
+    multiples of the chunk size, so the number of distinct compilations
+    is tiny.  Returned logits cover the whole chunk, ``(1, C, V)``.
     """
     _, pat, n_sb = _scan_layout(cfg)
     ps = pools["blocks"]["0"]["k"].shape[2]
     C = tokens.shape[1]
-    ctx = past + C
-    n_ctx_pages = -(-ctx // ps)          # static: pages holding the context
     x = L.embed(params, tokens).astype(cfg.jdtype)
     positions = (past + jnp.arange(C))[None, :]             # (1, C)
     write_flat = block_table[(past + jnp.arange(C)) // ps] * ps + (
         past + jnp.arange(C)
     ) % ps
-    ctx_flat = (
-        block_table[:n_ctx_pages, None] * ps + jnp.arange(ps)[None, :]
-    ).reshape(-1)                                           # (n_ctx_pages*ps,)
-    kv_len = jnp.array([ctx], jnp.int32)
     kinds = [layer_kind(cfg, j) for j in range(pat)]
 
     def layer(p: Params, pool: Dict[str, jax.Array], j: int, x: jax.Array):
@@ -187,17 +239,14 @@ def paged_prefill_chunk(
         q, k, v = L._proj_qkv(p["attn"], cfg, h, h)
         q = L.rope(q, positions, cfg.rope_theta)
         k = L.rope(k, positions, cfg.rope_theta)
-        pool_k = _scatter_tokens(pool["k"], write_flat, k[0])
-        pool_v = _scatter_tokens(pool["v"], write_flat, v[0])
-        K, hd = cfg.n_kv_heads, cfg.hd
-        k_ctx = pool_k.reshape(-1, K, hd)[ctx_flat][None]   # (1, n_ctx, K, hd)
-        v_ctx = pool_v.reshape(-1, K, hd)[ctx_flat][None]
-        out = ops.attention(
-            q, k_ctx, v_ctx, causal=True, q_offset=past, kv_len=kv_len
-        )
+        new_pool = _write_kv(pool, write_flat, k[0], v[0])
+        out = ops.paged_prefill_attention(
+            q[0], new_pool["k"], new_pool["v"], block_table, past,
+            k_scales=new_pool.get("k_s"), v_scales=new_pool.get("v_s"),
+        )[None]
         x = x + out.reshape(1, C, cfg.n_heads * cfg.hd) @ p["attn"]["wo"]
         x = _apply_ffn(p, cfg, kinds[j], x)
-        return x, {"k": pool_k, "v": pool_v}
+        return x, new_pool
 
     def body(x, xs):
         new_blk = {}

@@ -52,6 +52,15 @@ class ServeConfig:
     kv_pages : tuple of int, optional
         Per-replica page-pool sizes (heterogeneous KV budgets);
         ``None`` lets each engine size its own pool.
+    kv_dtype : str
+        Page-pool storage dtype (paged engines only): ``"fp32"`` keeps
+        the historical compute-dtype pages, ``"int8"`` stores quantized
+        pages with per-page scale pools (~4x tokens per byte).
+    kv_budget_bytes : int, optional
+        Per-replica KV budget in *bytes* (paged only); the pool is
+        sized to as many whole pages as fit.  Mutually exclusive with
+        ``kv_pages`` — this is how fp32 and int8 fleets are compared
+        at equal memory.
     migrate : bool
         Live-migrate decoding requests off KV-starved paged replicas.
     prefix_cache : bool
@@ -85,6 +94,8 @@ class ServeConfig:
     max_len: int = 96
     page_size: int = 16
     kv_pages: Optional[Tuple[int, ...]] = None
+    kv_dtype: str = "fp32"
+    kv_budget_bytes: Optional[int] = None
     migrate: bool = False
     prefix_cache: bool = False
     shared_prompt_tokens: int = 0
@@ -114,6 +125,22 @@ class ServeConfig:
                 raise ValueError(
                     f"kv_pages needs {self.replicas} entries, got {len(self.kv_pages)}"
                 )
+        if self.kv_dtype not in ("fp32", "int8"):
+            raise ValueError(
+                f"kv_dtype must be 'fp32' or 'int8', got {self.kv_dtype!r}"
+            )
+        if self.kv_dtype != "fp32" and self.engine != "paged":
+            raise ValueError("kv_dtype='int8' requires engine='paged'")
+        if self.kv_budget_bytes is not None:
+            if self.engine != "paged":
+                raise ValueError("kv_budget_bytes requires engine='paged'")
+            if self.kv_pages is not None:
+                raise ValueError(
+                    "kv_budget_bytes and kv_pages are mutually exclusive; "
+                    "pick one way to size the pool"
+                )
+            if self.kv_budget_bytes <= 0:
+                raise ValueError("kv_budget_bytes must be positive")
         # synthesized prompt = shared prefix + 2 suffix tokens, and the
         # engine needs at least one decode slot on top
         if self.shared_prompt_tokens > self.max_len - 3:
@@ -190,15 +217,23 @@ def build_engines(model_cfg, cfg: ServeConfig, params=None) -> List:
                     if params is not None
                     else init_params(mc, jax.random.key(cfg.seed))[0]
                 )
+        def pool_pages(mc):
+            if cfg.kv_budget_bytes is not None:
+                return PagedLLMEngine.pages_for_byte_budget(
+                    mc, cfg.page_size, cfg.kv_budget_bytes, cfg.kv_dtype
+                )
+            return None
+
         return [
             PagedLLMEngine(
                 mc,
                 max_seqs=cfg.max_batch,
                 max_len=cfg.max_len,
                 page_size=cfg.page_size,
-                num_pages=cfg.kv_pages[i] if cfg.kv_pages else None,
+                num_pages=cfg.kv_pages[i] if cfg.kv_pages else pool_pages(mc),
                 params=params_by_name[mc.name],
                 prefix_cache=cfg.prefix_cache,
+                kv_dtype=cfg.kv_dtype,
             )
             for i, mc in enumerate(model_cfgs)
         ]

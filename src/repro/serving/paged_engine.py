@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import itertools
 import math
+import os
 import time
 from collections import deque
 from dataclasses import dataclass
@@ -52,9 +53,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.paged_attention import (
+    check_block_table_bounds,
+    check_scale_pool_finite,
+)
 from ..models import init_params
 from ..models.config import ModelConfig
 from ..models.paged import (
+    KV_DTYPES,
     init_paged_pools,
     paged_decode_step,
     paged_prefill_chunk,
@@ -100,7 +106,14 @@ class MigrationTicket:
     kv : dict
         ``{layer_pattern_pos: {"k"|"v": ndarray}}`` — per-layer KV of
         the owned pages, shape ``(n_sb, n_pages, page_size, K, hd)``,
-        gathered to host memory in block-table order.
+        gathered to host memory in block-table order.  On int8-KV
+        engines the dict additionally carries the per-page scale pools
+        (``"k_s"``/``"v_s"``, ``(n_sb, n_pages, page_size, K)``
+        float32) — the int8 payload is meaningless without them.
+    kv_dtype : str
+        Source engine's page storage dtype (``"fp32"`` or ``"int8"``);
+        source and destination must agree, else the importer would
+        reinterpret the payload bytes.
     n_pages : int
         Number of pages in :attr:`kv` (and to allocate on import).
     page_size : int
@@ -129,6 +142,7 @@ class MigrationTicket:
     max_len: int
     model: str
     page_refcounts: Optional[List[int]] = None
+    kv_dtype: str = "fp32"
 
 
 class PagedLLMEngine(LatencyProfileMixin):
@@ -164,6 +178,13 @@ class PagedLLMEngine(LatencyProfileMixin):
         divergence and LRU eviction of dormant prefix pages under
         pressure.  Off by default — the cacheless engine is the
         byte-exact historical behaviour.
+    kv_dtype : str, optional
+        Page storage dtype: ``"fp32"`` (the model's compute dtype —
+        byte-identical to the historical engine) or ``"int8"``
+        (quantized pages with per-page scale pools dequantized inside
+        the kernels — ~4× the KV tokens per byte, tolerance-level
+        numerics).  Defaults to the ``REPRO_KV_DTYPE`` environment
+        variable, else ``"fp32"``.
     sanitize : bool, optional
         Run the KV-page sanitizer: the allocator mirrors every page
         transition in shadow state, every kernel-bound write and block
@@ -187,12 +208,20 @@ class PagedLLMEngine(LatencyProfileMixin):
         prefill_chunk: int = 64,
         prefix_cache: bool = False,
         sanitize: Optional[bool] = None,
+        kv_dtype: Optional[str] = None,
     ) -> None:
         if not supports_paged(cfg):
             raise ValueError(
                 f"config {cfg.name!r} is not paged-KV compatible; "
                 "use the slot LLMEngine"
             )
+        if kv_dtype is None:
+            kv_dtype = os.environ.get("REPRO_KV_DTYPE", "fp32")
+        if kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype must be one of {KV_DTYPES}, got {kv_dtype!r}"
+            )
+        self.kv_dtype = kv_dtype
         self.cfg = cfg
         self.max_seqs = max_seqs
         self.max_len = max_len
@@ -213,7 +242,7 @@ class PagedLLMEngine(LatencyProfileMixin):
 
         self.allocator = PageAllocator(num_pages, page_size, sanitize=sanitize)
         self._san = self.allocator.sanitizer
-        self.pools = init_paged_pools(cfg, num_pages, page_size)
+        self.pools = init_paged_pools(cfg, num_pages, page_size, kv_dtype)
         self.block_tables = np.full(
             (max_seqs, self.pages_per_seq), TRASH_PAGE, np.int32
         )
@@ -289,6 +318,71 @@ class PagedLLMEngine(LatencyProfileMixin):
             scheduler's placement score and the rebalancer both consult.
         """
         return self.allocator.free_pages * self.page_size
+
+    @property
+    def page_bytes(self) -> int:
+        """Bytes of pool storage one physical page costs across all layers.
+
+        Counts every pool leaf — K and V for each layer position and
+        superblock, plus the per-page scale pools on int8 engines — so
+        ``num_pages × page_bytes`` is the engine's true KV footprint.
+        This is the unit equal-*byte*-budget comparisons (fig11) and
+        ``ServeConfig.kv_budget_bytes`` sizing are denominated in.
+
+        Returns
+        -------
+        int
+            Per-page bytes (pools are shaped ``(n_sb, P, ...)``; the
+            page axis is axis 1).
+        """
+        total = 0
+        for pool in self.pools["blocks"].values():
+            for arr in pool.values():
+                total += arr.nbytes // arr.shape[1]
+        return total
+
+    @classmethod
+    def pages_for_byte_budget(
+        cls,
+        cfg: ModelConfig,
+        page_size: int,
+        budget_bytes: int,
+        kv_dtype: str = "fp32",
+    ) -> int:
+        """Pool size (pages, incl. the trash page) fitting a byte budget.
+
+        The equal-byte-budget counterpart of picking ``num_pages``
+        directly: int8 pages cost ~4× fewer bytes each (1-byte payload
+        plus 4-byte-per-(slot, kv-head) scales versus the compute
+        dtype), so the same budget buys proportionally more pages.
+
+        Parameters
+        ----------
+        cfg : ModelConfig
+            Model architecture (KV geometry and compute dtype).
+        page_size : int
+            Tokens per page.
+        budget_bytes : int
+            Total pool storage allowed, in bytes.
+        kv_dtype : str, optional
+            ``"fp32"`` or ``"int8"``.
+
+        Returns
+        -------
+        int
+            ``budget_bytes // page_bytes`` — how many physical pages
+            (trash page included) the budget holds.
+        """
+        from ..models.transformer import _scan_layout
+
+        _, pat, n_sb = _scan_layout(cfg)
+        K, hd = cfg.n_kv_heads, cfg.hd
+        if kv_dtype == "int8":
+            per_token = K * (hd * 1 + 4) * 2          # int8 k+v, f32 scales
+        else:
+            per_token = K * hd * jnp.dtype(cfg.jdtype).itemsize * 2
+        per_page = pat * n_sb * page_size * per_token
+        return int(budget_bytes // per_page)
 
     @property
     def reclaimable_token_capacity(self) -> int:
@@ -467,6 +561,8 @@ class PagedLLMEngine(LatencyProfileMixin):
                 self.pools["blocks"], jnp.int32(src), jnp.int32(dst)
             )
         }
+        if self._san is not None and self.kv_dtype == "int8":
+            self._san.note_scale_copy(src, dst)
         self.cow_copies += 1
 
     def _ensure_exclusive(self, row: int, pi: int) -> bool:
@@ -617,7 +713,10 @@ class PagedLLMEngine(LatencyProfileMixin):
                 continue  # this row was evicted to make room; retry later
             if self._san is not None:
                 for pi in range(pos // ps, (pos + chunk - 1) // ps + 1):
-                    self._san.note_write(row, self.seq_pages[row][pi])
+                    self._san.note_write(
+                        row, self.seq_pages[row][pi],
+                        quantized=self.kv_dtype == "int8",
+                    )
             toks = jnp.asarray([req.prompt[pos : pos + chunk]], jnp.int32)
             bt = jnp.asarray(self.block_tables[row], jnp.int32)
             logits, self.pools = self._prefill_fn(pos)(
@@ -738,14 +837,24 @@ class PagedLLMEngine(LatencyProfileMixin):
             # the incoming token writes at position lengths[row]: that
             # page must be exclusively owned, and the whole table must
             # stay inside the pool before the kernel DMAs from it
-            from ..kernels.paged_attention import check_block_table_bounds
-
             check_block_table_bounds(
                 bt, lens, self.num_pages, self.page_size, TRASH_PAGE
             )
+            if self.kv_dtype == "int8":
+                # spot-check one layer's scale pools: a NaN/non-positive
+                # scale would multiply *valid* history, not masked slots
+                pool0 = self.pools["blocks"]["0"]
+                check_scale_pool_finite(
+                    np.asarray(jax.device_get(pool0["k_s"][0])),
+                    np.asarray(jax.device_get(pool0["v_s"][0])),
+                    bt, lens, self.page_size,
+                )
             for row in rows:
                 pi = int(self.lengths[row]) // self.page_size
-                self._san.note_write(row, self.seq_pages[row][pi])
+                self._san.note_write(
+                    row, self.seq_pages[row][pi],
+                    quantized=self.kv_dtype == "int8",
+                )
 
         t0 = time.perf_counter()
         logits, self.pools = self._decode(
@@ -848,12 +957,15 @@ class PagedLLMEngine(LatencyProfileMixin):
         req = self.active.pop(row)
         pages = list(self.seq_pages[row])
         idx = jnp.asarray(np.asarray(pages, np.int32))
-        kv: Dict[str, Dict[str, np.ndarray]] = {}
-        for j, pool in self.pools["blocks"].items():
-            kv[j] = {
-                "k": np.asarray(jax.device_get(pool["k"][:, idx])),
-                "v": np.asarray(jax.device_get(pool["v"][:, idx])),
+        # every pool leaf travels: K/V payload plus, on int8 engines,
+        # the per-page scale pools the payload dequantizes through
+        kv: Dict[str, Dict[str, np.ndarray]] = {
+            j: {
+                name: np.asarray(jax.device_get(arr[:, idx]))
+                for name, arr in pool.items()
             }
+            for j, pool in self.pools["blocks"].items()
+        }
         ticket = MigrationTicket(
             req=req,
             last_token=int(self._tokens[row]),
@@ -867,9 +979,12 @@ class PagedLLMEngine(LatencyProfileMixin):
             # > 1 means the page stays alive on the source for its
             # co-owners / prefix index; the ticket carries a copy)
             page_refcounts=[self.allocator.refcount(p) for p in pages],
+            kv_dtype=self.kv_dtype,
         )
         if self._san is not None:
             self._san.validate_ticket(pages, ticket.page_refcounts)
+            if self.kv_dtype == "int8":
+                self._san.validate_scale_export(pages)
         self._release_row(row)
         self.migrations_out += 1
         return ticket
@@ -912,6 +1027,12 @@ class PagedLLMEngine(LatencyProfileMixin):
             raise ValueError(
                 f"model mismatch: ticket {ticket.model!r} vs {self.cfg.name!r}"
             )
+        if ticket.kv_dtype != self.kv_dtype:
+            raise ValueError(
+                f"kv_dtype mismatch: ticket {ticket.kv_dtype!r} vs engine "
+                f"{self.kv_dtype!r} — the page payload bytes are not "
+                "interchangeable"
+            )
         if ticket.max_len > self.max_len:
             raise ValueError(
                 f"max_len mismatch: ticket from a max_len={ticket.max_len} "
@@ -926,16 +1047,15 @@ class PagedLLMEngine(LatencyProfileMixin):
             return False
         self.free_rows.pop(0)
         idx = jnp.asarray(np.asarray(pages, np.int32))
-        blocks = {}
-        for j, pool in self.pools["blocks"].items():
-            blocks[j] = {
-                "k": pool["k"].at[:, idx].set(
-                    jnp.asarray(ticket.kv[j]["k"], pool["k"].dtype)
-                ),
-                "v": pool["v"].at[:, idx].set(
-                    jnp.asarray(ticket.kv[j]["v"], pool["v"].dtype)
-                ),
+        blocks = {
+            j: {
+                name: arr.at[:, idx].set(
+                    jnp.asarray(ticket.kv[j][name], arr.dtype)
+                )
+                for name, arr in pool.items()
             }
+            for j, pool in self.pools["blocks"].items()
+        }
         self.pools = {"blocks": blocks}
         self.seq_pages[row] = pages
         self.block_tables[row] = TRASH_PAGE
@@ -943,7 +1063,9 @@ class PagedLLMEngine(LatencyProfileMixin):
         if self._san is not None:
             self._san.note_table(row, pages)
             for p in pages:  # ticket KV scatters into every fresh page
-                self._san.note_write(row, p)
+                self._san.note_write(
+                    row, p, quantized=self.kv_dtype == "int8"
+                )
         self.lengths[row] = ticket.length
         self._tokens[row] = ticket.last_token
         self.active[row] = ticket.req

@@ -796,7 +796,6 @@ def configure_cluster(
             for c in cands:
                 d = gen_durs.get(c, 0.0)
                 # planning inner stages: LLM candidates expressed in seconds
-                from ..core.dag import StageType as _ST
                 reg_seconds += d  # conservative: treat as regular-side load
     tok_rate = llm_tokens / span
     reg_rate = reg_seconds / span

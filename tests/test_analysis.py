@@ -98,6 +98,7 @@ def test_rule_catalog_is_complete():
     assert set(rule_catalog()) == {
         "wall-clock", "unordered-set", "mutable-default",
         "seed-missing", "unseeded-rng", "global-rng",
+        "hot-loop-import",
     }
 
 
@@ -260,6 +261,77 @@ def test_global_rng_rule():
     # instance-level draws off a constructed Generator are the fix
     assert _lint("x = self.rng.random()\n") == []
     assert _lint("x = rng.choice(xs)\n") == []
+
+
+# ---------------------------------------------------------------------------
+# perf rules
+# ---------------------------------------------------------------------------
+def test_hot_loop_import_rule_positives():
+    assert _rules(_lint(
+        "for x in xs:\n"
+        "    import json\n"
+        "    json.dumps(x)\n"
+    )) == ["hot-loop-import"]
+    assert _rules(_lint(
+        "while run:\n"
+        "    from os import path\n"
+    )) == ["hot-loop-import"]
+    # the shipped bug shape: an import anywhere inside step()
+    assert _rules(_lint(
+        "class Engine:\n"
+        "    def step(self):\n"
+        "        if self.sanitize:\n"
+        "            from .kernels import check\n"
+        "            check()\n"
+    )) == ["hot-loop-import"]
+    # nested helper defined inside step() is still per-iteration code
+    assert _rules(_lint(
+        "def _step():\n"
+        "    def inner():\n"
+        "        import json\n"
+        "        return json\n"
+        "    return inner()\n"
+    )) == ["hot-loop-import"]
+
+
+def test_hot_loop_import_rule_negatives():
+    # module level and function-top lazy imports are intentional idiom
+    assert _lint("import json\n") == []
+    assert _lint(
+        "def build():\n"
+        "    import jax\n"
+        "    return jax\n"
+    ) == []
+    # a def inside a loop resets loop context: its body runs when called
+    assert _lint(
+        "for x in xs:\n"
+        "    def cb():\n"
+        "        import json\n"
+        "        return json\n"
+    ) == []
+
+
+def test_paged_engine_step_has_no_imports():
+    """Regression: ``PagedLLMEngine.step`` once imported the bounds
+    checker per iteration; the hot path must stay import-free."""
+    import ast
+
+    tree = ast.parse(
+        (REPO / "src/repro/serving/paged_engine.py").read_text()
+    )
+    step = next(
+        node
+        for node in ast.walk(tree)
+        if isinstance(node, ast.FunctionDef) and node.name == "step"
+    )
+    imports = [
+        node for node in ast.walk(step)
+        if isinstance(node, (ast.Import, ast.ImportFrom))
+    ]
+    assert imports == [], (
+        f"imports inside PagedLLMEngine.step at lines "
+        f"{[i.lineno for i in imports]}"
+    )
 
 
 def test_repo_sweep_is_clean():

@@ -1,0 +1,100 @@
+"""Repo-hygiene and benchmark-harness regression tests.
+
+Two bug classes this file pins down:
+
+- **tracked bytecode** — four ``__pycache__/*.pyc`` files were once
+  committed; the index must stay free of bytecode and ``.gitignore``
+  must keep new ones out of ``git status`` noise.
+- **silent benchmark skips** — ``python -m benchmarks.run --only <typo>``
+  used to run *nothing* and exit 0 (green CI, no data), and the
+  ``fig7_slo`` benchmark was never dispatched at all.  The harness now
+  validates ``--only`` against its registry and errors loudly.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _git(*args):
+    return subprocess.run(
+        ["git", *args], cwd=REPO, capture_output=True, text=True
+    )
+
+
+# ---------------------------------------------------------------------------
+# repo hygiene
+# ---------------------------------------------------------------------------
+def test_no_tracked_bytecode():
+    res = _git("ls-files")
+    if res.returncode != 0:
+        pytest.skip("not a git checkout")
+    bad = [
+        line for line in res.stdout.splitlines()
+        if line.endswith((".pyc", ".pyo")) or "__pycache__/" in line
+    ]
+    assert not bad, f"bytecode artifacts tracked in git: {bad}"
+
+
+def test_gitignore_covers_bytecode():
+    text = (REPO / ".gitignore").read_text()
+    assert "__pycache__/" in text.split()
+    assert "*.pyc" in text.split()
+
+
+# ---------------------------------------------------------------------------
+# benchmark harness
+# ---------------------------------------------------------------------------
+def _run_harness(*args):
+    return subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", *args],
+        cwd=REPO, capture_output=True, text=True, timeout=120,
+    )
+
+
+def test_unknown_only_name_is_an_error():
+    # pre-fix this exited 0 having run nothing
+    res = _run_harness("--only", "fig7_sl0")
+    assert res.returncode != 0
+    assert "unknown benchmark name" in res.stderr
+    assert "fig7_sl0" in res.stderr
+    assert "fig7_slo" in res.stderr  # the known set is listed for the user
+
+
+def test_empty_only_is_an_error():
+    res = _run_harness("--only", ",")
+    assert res.returncode != 0
+
+
+def test_registry_dispatches_every_benchmark():
+    sys.path.insert(0, str(REPO))
+    try:
+        from benchmarks import run as harness
+    finally:
+        sys.path.remove(str(REPO))
+    # fig7_slo existed as a module but was missing from the dispatcher;
+    # fig11 is the kernel/capacity benchmark added alongside int8 pages
+    for name in ("fig1", "fig7", "fig7_slo", "table1", "fig9", "fig10",
+                 "fig10_cascade", "fig8", "fig11", "roofline"):
+        assert name in harness.ENTRIES, f"{name} missing from harness"
+    # every registered entry maps to an importable benchmark module
+    import importlib
+    mod_by_entry = {
+        "fig1": "fig1_characterization",
+        "fig7": "fig7_simulation",
+        "fig7_slo": "fig7_slo",
+        "table1": "table1_overhead",
+        "fig9": "fig9_sensitivity",
+        "fig10": "fig10_ablation",
+        "fig10_cascade": "fig10_cascade",
+        "fig8": "fig8_testbed",
+        "fig11": "fig11_kernels",
+        "roofline": "roofline",
+    }
+    assert set(mod_by_entry) == set(harness.ENTRIES)
+    for mod in mod_by_entry.values():
+        assert (REPO / "benchmarks" / f"{mod}.py").exists(), mod

@@ -1,0 +1,238 @@
+"""Int8 KV pages at the engine level: determinism + lifecycle coverage.
+
+Quantize-once semantics make int8 page bits a pure function of the
+tokens they hold, so every *within-int8* differential that held for
+fp32 pages must keep holding:
+
+- prefix-cache on/off token equality under ``kv_dtype="int8"``;
+- live migration token equality under int8, with the ticket carrying
+  the per-page scale pools;
+- kv_dtype-mismatched tickets rejected loudly (int8 payload bytes mean
+  nothing to an fp32 pool and vice versa);
+- sanitized int8 runs exercise the scale-pool shadow checks end to end;
+- byte accounting: ``pages_for_byte_budget`` buys strictly more int8
+  pages per byte, ``page_bytes`` counts the scale pools, and the
+  ``ServeConfig`` surface validates the new knobs.
+
+``kv_dtype="fp32"`` remains the default everywhere, so the existing
+golden trajectories and paged-vs-slot equality suites pin that path.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.analysis.kvsan import KVSanError, KVSanitizer
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serving import PagedLLMEngine, Request, migrate_request
+from repro.serving.config import ServeConfig, build_engines
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return get_smoke_config("stablelm_1_6b")
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return init_params(cfg, jax.random.key(0))[0]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("max_seqs", 4)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    kw.setdefault("num_pages", 49)
+    return PagedLLMEngine(cfg, params=params, kv_dtype="int8", **kw)
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        assert eng.admit(r)
+    toks = {}
+    for _ in range(400):
+        for r in eng.step():
+            toks[r.rid] = list(r.out_tokens)
+        if not eng.batch_size and not eng.waiting:
+            break
+    assert not eng.batch_size and not eng.waiting
+    return toks
+
+
+def _reqs(prompts, max_new=10):
+    return [
+        Request(rid=i, prompt=list(p), max_new_tokens=max_new)
+        for i, p in enumerate(prompts)
+    ]
+
+
+PROMPTS = [[1, 2, 3, 4], [1, 2, 3, 9], [5, 6], [7, 8, 9, 10, 11]]
+SHARED = [3, 1, 4, 1, 5, 9, 2, 6] * 2          # two full 8-token pages
+
+
+# ---------------------------------------------------------------------------
+# differential determinism under int8
+# ---------------------------------------------------------------------------
+def test_int8_decode_is_deterministic(cfg, params):
+    a = _drain(_engine(cfg, params), _reqs(PROMPTS))
+    b = _drain(_engine(cfg, params), _reqs(PROMPTS))
+    assert a == b
+
+
+def test_int8_prefix_cache_token_equality(cfg, params):
+    prompts = [SHARED + [20 + i] for i in range(4)]
+    plain = {}
+    plain.update(_drain(_engine(cfg, params), _reqs(prompts[:1])))
+    plain.update(_drain(_engine(cfg, params), _reqs(prompts)[1:]))
+    eng = _engine(cfg, params, prefix_cache=True)
+    # first request populates the radix index, the rest adopt its pages
+    cached = dict(_drain(eng, _reqs(prompts[:1])))
+    cached.update(_drain(eng, _reqs(prompts)[1:]))
+    assert cached == plain
+    assert eng.prefill_skipped_tokens > 0       # the cache actually fired
+    eng.allocator.check_no_leaks()
+
+
+def test_int8_migration_token_equality(cfg, params):
+    ref_out = _drain(_engine(cfg, params), _reqs([PROMPTS[0]], max_new=12))
+    a = _engine(cfg, params)
+    b = _engine(cfg, params)
+    out = {}
+    a.admit(Request(rid=0, prompt=list(PROMPTS[0]), max_new_tokens=12,
+                    on_finish=lambda r: out.update({r.rid: list(r.out_tokens)})))
+    for _ in range(4):
+        a.step()
+    assert migrate_request(a, b, a.youngest_active_row())
+    for _ in range(40):
+        b.step()
+        if not b.batch_size:
+            break
+    assert out == ref_out
+    a.allocator.check_no_leaks()
+    b.allocator.check_no_leaks()
+
+
+def test_int8_ticket_carries_scales_and_dtype(cfg, params):
+    a = _engine(cfg, params)
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=8))
+    for _ in range(2):
+        a.step()
+    ticket = a.export_request(a.youngest_active_row())
+    assert ticket.kv_dtype == "int8"
+    for layer_kv in ticket.kv.values():
+        assert {"k", "v", "k_s", "v_s"} <= set(layer_kv)
+        assert layer_kv["k"].dtype == np.int8
+        assert layer_kv["k_s"].dtype == np.float32
+    assert a.import_request(ticket)             # roll back, no leak
+    while a.batch_size or a.waiting:
+        a.step()
+    a.allocator.check_no_leaks()
+
+
+def test_kv_dtype_mismatch_import_rejected(cfg, params):
+    a = _engine(cfg, params)
+    c = PagedLLMEngine(cfg, max_seqs=4, max_len=64, page_size=8,
+                       num_pages=49, params=params, kv_dtype="fp32")
+    a.admit(Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6))
+    a.step()
+    ticket = a.export_request(a.youngest_active_row())
+    with pytest.raises(ValueError, match="kv_dtype mismatch"):
+        c.import_request(ticket)
+    assert a.import_request(ticket)
+    while a.batch_size or a.waiting:
+        a.step()
+    a.allocator.check_no_leaks()
+
+
+def test_int8_sanitized_run_clean(cfg, params):
+    """A full int8 serve under the sanitizer: every write is marked
+    quantized, exports validate scale coverage, scales stay finite."""
+    eng = _engine(cfg, params, sanitize=True, prefix_cache=True)
+    prompts = [SHARED + [30 + i] for i in range(3)]
+    toks = _drain(eng, _reqs(prompts))
+    assert len(toks) == 3
+    eng.allocator.check_no_leaks()
+
+
+def test_sanitizer_scale_export_check():
+    san = KVSanitizer(num_pages=8, page_size=4)
+    san.on_alloc([1, 2], 0)
+    san.note_table(0, [1, 2])
+    san.note_write(0, 1, quantized=True)
+    san.validate_scale_export([1])
+    with pytest.raises(KVSanError, match="scale-pool mismatch"):
+        san.validate_scale_export([1, 2])      # page 2 never scale-written
+    # CoW copies inherit the source page's scale coverage
+    san.on_alloc([3], 0)
+    san.note_scale_copy(1, 3)
+    san.validate_scale_export([3])
+
+
+# ---------------------------------------------------------------------------
+# byte accounting + config surface
+# ---------------------------------------------------------------------------
+def test_pages_for_byte_budget_ratio(cfg):
+    budget = 1 << 18
+    fp32 = PagedLLMEngine.pages_for_byte_budget(cfg, 8, budget, "fp32")
+    int8 = PagedLLMEngine.pages_for_byte_budget(cfg, 8, budget, "int8")
+    assert int8 > fp32 > 0
+
+
+def test_page_bytes_counts_scale_pools(cfg, params):
+    fp32 = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8,
+                          num_pages=17, params=params, kv_dtype="fp32")
+    int8 = _engine(cfg, params, max_seqs=2, num_pages=17)
+    # int8 payload is 1B/elem + 4B/slot/head of scales; the engine's own
+    # accounting must match a hand count over the pool leaves
+    for eng in (fp32, int8):
+        hand = sum(
+            arr.nbytes // arr.shape[1]
+            for pool in eng.pools["blocks"].values()
+            for arr in pool.values()
+        )
+        assert eng.page_bytes == hand
+    assert int8.page_bytes < fp32.page_bytes
+    # budget sizing never exceeds the budget it was given
+    budget = 1 << 18
+    for dt, eng in (("fp32", fp32), ("int8", int8)):
+        pages = PagedLLMEngine.pages_for_byte_budget(cfg, 8, budget, dt)
+        assert pages * eng.page_bytes <= budget
+
+
+def test_serve_config_kv_dtype_validation():
+    with pytest.raises(ValueError, match="engine='paged'"):
+        ServeConfig(engine="slot", kv_dtype="int8")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        ServeConfig(engine="paged", kv_dtype="fp16")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ServeConfig(engine="paged", kv_pages=(8,), kv_budget_bytes=1 << 20)
+    with pytest.raises(ValueError, match="engine='paged'"):
+        ServeConfig(engine="slot", kv_budget_bytes=1 << 20)
+    cfg = ServeConfig(engine="paged", kv_dtype="int8",
+                      kv_budget_bytes=1 << 20)
+    assert cfg.kv_dtype == "int8"
+
+
+def test_build_engines_equal_byte_budget(cfg):
+    budget = 1 << 18
+    fleets = {}
+    for dt in ("fp32", "int8"):
+        sc = ServeConfig(engine="paged", replicas=1, kv_dtype=dt,
+                         kv_budget_bytes=budget, seed=0)
+        fleets[dt] = build_engines(cfg, sc)[0]
+        assert fleets[dt].kv_dtype == dt
+        assert fleets[dt].num_pages * fleets[dt].page_bytes <= budget
+    assert fleets["int8"].num_pages > fleets["fp32"].num_pages
+
+
+def test_env_var_default_kv_dtype(cfg, params, monkeypatch):
+    monkeypatch.setenv("REPRO_KV_DTYPE", "int8")
+    eng = PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8,
+                         num_pages=17, params=params)
+    assert eng.kv_dtype == "int8"
+    assert "k_s" in eng.pools["blocks"]["0"]
+    monkeypatch.setenv("REPRO_KV_DTYPE", "bogus")
+    with pytest.raises(ValueError, match="kv_dtype"):
+        PagedLLMEngine(cfg, max_seqs=2, max_len=64, page_size=8,
+                       num_pages=17, params=params)

@@ -1,21 +1,32 @@
-"""Paged decode-attention kernel vs the dense/paged oracles.
+"""Paged attention kernels (decode + fused chunked prefill) vs oracles.
 
 All Pallas calls run in interpret mode so the sweep works on CPU CI;
 shapes sweep head counts (MHA/GQA/MQA), page sizes, ragged per-request
-lengths, and dtypes per the kernel-hardening contract.
+lengths, and dtypes per the kernel-hardening contract.  The quantized
+sweeps run both kernels over int8 pages with per-page scales and
+compare against the dense oracle on the *dequantized* pools — the
+quantization error itself is bounded separately (round-trip and
+hypothesis property tests on ``quantize_kv_ref``).
 """
 
+import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis import given, settings
 
 from repro.kernels import ops
 from repro.kernels import ref as R
-from repro.kernels.paged_attention import paged_decode_attention
+from repro.kernels.paged_attention import (
+    paged_decode_attention,
+    paged_prefill_attention,
+)
 
 RNG = np.random.default_rng(42)
 
 TOL = {jnp.float32: 3e-5, jnp.bfloat16: 2e-2}
+# int8 paths: dominated by quantization, not kernel arithmetic
+Q_TOL = 3e-5
 
 
 def _rand(shape, dtype):
@@ -106,3 +117,181 @@ def test_ops_dispatch_paged_matches_ref():
     out = ops.paged_decode_attention(q, kp, vp, bt, lens)
     ref = R.paged_decode_attention_ref(q, kp, vp, bt, lens)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fused chunked prefill
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "H,K,hd,ps,past,C",
+    [
+        (8, 2, 64, 16, 0, 16),    # first chunk, page-aligned
+        (4, 4, 64, 8, 8, 8),      # aligned continuation
+        (4, 2, 64, 8, 12, 7),     # non-aligned past AND tail
+        (4, 1, 128, 32, 5, 3),    # MQA, chunk inside one page
+        (6, 2, 64, 8, 17, 23),    # odd everything, multi-page chunk
+    ],
+)
+def test_paged_prefill_matches_oracles(H, K, hd, ps, past, C, dtype):
+    ctx = past + C
+    npp = -(-ctx // ps) + 2          # slack pages past the context
+    P = npp + 4
+    q = _rand((C, H, hd), dtype)
+    kp = _rand((P, ps, K, hd), dtype)
+    vp = _rand((P, ps, K, hd), dtype)
+    bt = _random_tables(1, npp, P)[0]
+    out = paged_prefill_attention(q, kp, vp, bt, past, interpret=True)
+    ref = R.paged_prefill_attention_ref(q, kp, vp, bt, past)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+    # oracle self-consistency: the paged ref IS the dense path (gather
+    # + causal attention_ref with a query offset) — exactly what the
+    # pre-fused prefill computed, so fp32 equality here certifies the
+    # fused kernel against the historical dense implementation
+    n_ctx = -(-ctx // ps)
+    dense = R.attention_ref(
+        q[None],
+        R.gather_pages(kp, bt[None, :n_ctx]).reshape(1, -1, K, hd),
+        R.gather_pages(vp, bt[None, :n_ctx]).reshape(1, -1, K, hd),
+        causal=True, q_offset=past, kv_len=jnp.array([ctx], jnp.int32),
+    )[0]
+    np.testing.assert_allclose(
+        np.asarray(ref, np.float32), np.asarray(dense, np.float32),
+        atol=TOL[dtype], rtol=TOL[dtype],
+    )
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_paged_prefill_ignores_garbage(quantized):
+    """Pages outside the block table and slots >= ctx must not leak —
+    including under int8, where a garbage *scale* could amplify them."""
+    H, K, hd, ps, past, C = 4, 2, 64, 8, 12, 7
+    ctx = past + C
+    npp = -(-ctx // ps)
+    P = npp + 5
+    q = _rand((C, H, hd), jnp.float32)
+    kp = np.asarray(_rand((P, ps, K, hd), jnp.float32))
+    vp = np.asarray(_rand((P, ps, K, hd), jnp.float32))
+    bt = np.asarray(_random_tables(1, npp, P)[0])
+
+    kp2, vp2 = kp.copy(), vp.copy()
+    for p in range(P):
+        if p not in set(bt.tolist()):
+            kp2[p] = 99.0
+            vp2[p] = -99.0
+    tail = ctx - (npp - 1) * ps      # live slots in the last ctx page
+    if tail < ps:
+        kp2[bt[-1], tail:] = 77.0
+        vp2[bt[-1], tail:] = -77.0
+
+    def run(kparr, vparr):
+        kj, vj = jnp.asarray(kparr), jnp.asarray(vparr)
+        if quantized:
+            kq, ks = R.quantize_kv_ref(kj)
+            vq, vs = R.quantize_kv_ref(vj)
+            return paged_prefill_attention(
+                q, kq, vq, jnp.asarray(bt, jnp.int32), past,
+                interpret=True, k_scales=ks, v_scales=vs,
+            )
+        return paged_prefill_attention(
+            q, kj, vj, jnp.asarray(bt, jnp.int32), past, interpret=True
+        )
+
+    np.testing.assert_allclose(
+        np.asarray(run(kp, vp)), np.asarray(run(kp2, vp2)), atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# int8 pages with per-page scales
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "B,H,K,hd,ps,npp",
+    [
+        (2, 8, 2, 64, 16, 8),
+        (3, 4, 1, 128, 32, 4),
+        (4, 6, 2, 64, 8, 5),
+    ],
+)
+def test_paged_decode_quantized_matches_oracle(B, H, K, hd, ps, npp):
+    P = B * npp + 1
+    q = _rand((B, H, hd), jnp.float32)
+    kq, ks = R.quantize_kv_ref(_rand((P, ps, K, hd), jnp.float32))
+    vq, vs = R.quantize_kv_ref(_rand((P, ps, K, hd), jnp.float32))
+    bt = _random_tables(B, npp, P)
+    lens = jnp.asarray(RNG.integers(1, npp * ps + 1, size=(B,)), jnp.int32)
+    out = paged_decode_attention(
+        q, kq, vq, bt, lens, interpret=True, k_scales=ks, v_scales=vs
+    )
+    ref = R.paged_decode_attention_ref(
+        q, kq, vq, bt, lens, k_scales=ks, v_scales=vs
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=Q_TOL, rtol=Q_TOL
+    )
+    # and the ref equals dense attention over explicitly dequantized pools
+    dense = R.decode_attention_ref(
+        q,
+        R.gather_pages(R.dequantize_pages_ref(kq, ks), bt),
+        R.gather_pages(R.dequantize_pages_ref(vq, vs), bt),
+        lens,
+    )
+    np.testing.assert_allclose(
+        np.asarray(ref), np.asarray(dense), atol=Q_TOL, rtol=Q_TOL
+    )
+
+
+@pytest.mark.parametrize("past,C", [(0, 16), (12, 7), (17, 23)])
+def test_paged_prefill_quantized_matches_oracle(past, C):
+    H, K, hd, ps = 4, 2, 64, 8
+    ctx = past + C
+    npp = -(-ctx // ps) + 1
+    P = npp + 3
+    q = _rand((C, H, hd), jnp.float32)
+    kq, ks = R.quantize_kv_ref(_rand((P, ps, K, hd), jnp.float32))
+    vq, vs = R.quantize_kv_ref(_rand((P, ps, K, hd), jnp.float32))
+    bt = _random_tables(1, npp, P)[0]
+    out = paged_prefill_attention(
+        q, kq, vq, bt, past, interpret=True, k_scales=ks, v_scales=vs
+    )
+    ref = R.paged_prefill_attention_ref(
+        q, kq, vq, bt, past, k_scales=ks, v_scales=vs
+    )
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref), atol=Q_TOL, rtol=Q_TOL
+    )
+
+
+def test_quantize_roundtrip_error_bound():
+    """|dequant(quant(x)) - x| <= scale/2 elementwise, scales positive."""
+    x = _rand((7, 8, 3, 32), jnp.float32)
+    q, s = R.quantize_kv_ref(x)
+    assert q.dtype == jnp.int8
+    assert s.dtype == jnp.float32
+    assert bool(jnp.all(s > 0))
+    err = jnp.abs(R.dequantize_pages_ref(q, s) - x)
+    assert bool(jnp.all(err <= s[..., None] * 0.5 + 1e-7))
+    # zero vectors quantize to exact zeros with the floor scale
+    q0, s0 = R.quantize_kv_ref(jnp.zeros((2, 4, 1, 8), jnp.float32))
+    assert bool(jnp.all(q0 == 0)) and bool(jnp.all(s0 > 0))
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    vals=st.lists(
+        st.floats(min_value=-1e4, max_value=1e4, allow_nan=False,
+                  width=32),
+        min_size=8, max_size=8,
+    )
+)
+def test_quantize_error_bound_property(vals):
+    """Hypothesis: the per-vector scale bounds round-trip error at any
+    magnitude (amax/127-scaled, so error <= scale/2 + float eps)."""
+    x = jnp.asarray(np.array(vals, np.float32).reshape(1, 1, 1, 8))
+    q, s = R.quantize_kv_ref(x)
+    err = np.asarray(jnp.abs(R.dequantize_pages_ref(q, s) - x))
+    bound = float(s.reshape(())) * 0.5 * (1 + 1e-5) + 1e-7
+    assert err.max() <= bound
